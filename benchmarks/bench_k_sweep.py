@@ -1,0 +1,21 @@
+"""Paper Figure 8: query-time out-degree limit K sweep on one RNN-Descent
+graph (no rebuild — the paper's point: K is chosen AFTER construction).
+
+Claims validated: small K favors QPS, large K favors recall; K=inf is safe
+for recall but wasteful when hub vertices exist."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run() -> list[dict]:
+    rows = []
+    x, q, gt = common.dataset("sift-like")
+    _, g = common.build_timed("rnn-descent", x)
+    for k in (4, 8, 16, 32, 64):
+        for r in common.search_sweep(x, g, q, gt, k, l_values=(16, 48)):
+            rows.append({"bench": "k_sweep", "k": k, **r})
+            common.emit(f"k_sweep/K={k}/L{r['L']}", 1e6 / max(r["qps"], 1e-9),
+                        f"recall@1={r['recall_at_1']},qps={r['qps']}")
+    common.save_json("bench_k_sweep", rows)
+    return rows

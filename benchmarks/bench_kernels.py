@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks: Pallas (interpret mode) vs pure-jnp oracle.
+
+interpret=True runs the kernel body via the CPU interpreter, so wall-clock
+here measures CORRECTNESS-path overhead, not TPU perf (that is what the
+roofline/dry-run measures); the oracle timing is the meaningful CPU number.
+Max-abs-err vs the oracle is asserted and reported."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels.fm_interact import fm_interact, fm_interact_ref
+from repro.kernels.pairwise_l2 import pairwise_l2, pairwise_l2_ref
+from repro.kernels.rng_prune import rng_prune, rng_prune_ref
+
+
+def _time(fn, *a, reps=3):
+    jax.block_until_ready(fn(*a))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn(*a))
+    return (time.perf_counter() - t0) / reps, out
+
+
+def run() -> list[dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    a = jax.random.normal(key, (1024, 128))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (2048, 128))
+    t_k, out_k = _time(lambda x, y: pairwise_l2(x, y, tile_m=256, tile_n=256), a, b)
+    t_r, out_r = _time(pairwise_l2_ref, a, b)
+    err = float(jnp.max(jnp.abs(out_k - out_r)))
+    assert err < 1e-3
+    rows.append({"bench": "kernels", "kernel": "pairwise_l2",
+                 "pallas_interpret_s": t_k, "ref_s": t_r, "max_abs_err": err})
+    common.emit("kernels/pairwise_l2", t_r * 1e6, f"max_err={err:.2e}")
+
+    x = jax.random.normal(key, (512, 64))
+    ids = jnp.argsort(jax.random.uniform(key, (128, 512)), axis=1)[:, :32].astype(jnp.int32)
+    base = jnp.arange(128, dtype=jnp.int32)
+    d = jnp.sort(jnp.sum((x[ids] - x[base % 512][:, None]) ** 2, -1), axis=1)
+    flags = jnp.ones((128, 32), jnp.uint8)
+    t_k, (keep_k, _, _) = _time(lambda: rng_prune(x, ids, d, flags))
+    t_r, (keep_r, _, _) = _time(lambda: rng_prune_ref(ids, d, flags, x[jnp.maximum(ids, 0)]))
+    agree = float(jnp.mean(keep_k == keep_r.astype(bool)))
+    assert agree == 1.0
+    rows.append({"bench": "kernels", "kernel": "rng_prune",
+                 "pallas_interpret_s": t_k, "ref_s": t_r, "keep_agreement": agree})
+    common.emit("kernels/rng_prune", t_r * 1e6, f"keep_agree={agree}")
+
+    e = jax.random.normal(key, (8192, 39, 10))
+    t_k, out_k = _time(fm_interact, e)
+    t_r, out_r = _time(fm_interact_ref, e)
+    err = float(jnp.max(jnp.abs(out_k - out_r)))
+    assert err < 1e-2
+    rows.append({"bench": "kernels", "kernel": "fm_interact",
+                 "pallas_interpret_s": t_k, "ref_s": t_r, "max_abs_err": err})
+    common.emit("kernels/fm_interact", t_r * 1e6, f"max_err={err:.2e}")
+
+    common.save_json("bench_kernels", rows)
+    return rows

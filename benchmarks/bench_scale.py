@@ -1,0 +1,33 @@
+"""Paper §5.5 (SIFT20M) analog: construction-time scaling with corpus size.
+
+Claims validated: RNN-Descent's construction-speed advantage over the
+refinement pipeline persists (and grows) with n."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks import common
+from repro.core import nsg_style, rnn_descent as rd
+from repro.data.synthetic import VectorDatasetSpec, clustered_vectors
+
+
+def run() -> list[dict]:
+    rows = []
+    for n in (2000, 4000, 8000):
+        spec = VectorDatasetSpec("scale", n=n, d=64, n_queries=100, n_clusters=32)
+        x, _ = clustered_vectors(jax.random.PRNGKey(0), spec)
+        for method in ("rnn-descent", "nsg-style"):
+            fn = (lambda xx: rd.build(xx, common.RNND_CFG, jax.random.PRNGKey(1))) \
+                if method == "rnn-descent" else \
+                (lambda xx: nsg_style.build(xx, common.NSG_CFG, jax.random.PRNGKey(1)))
+            jax.block_until_ready(fn(x[:512]))
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            sec = time.perf_counter() - t0
+            rows.append({"bench": "scale", "n": n, "method": method,
+                         "seconds": round(sec, 3)})
+            common.emit(f"scale/n={n}/{method}", sec * 1e6, f"n={n}")
+    common.save_json("bench_scale", rows)
+    return rows

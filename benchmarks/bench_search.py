@@ -1,0 +1,25 @@
+"""Paper Figure 2: QPS vs Recall@1 tradeoff curves per method.
+
+Claim validated: RNN-Descent's graph matches the refinement baseline's
+search quality (recall at equal beam width) with far cheaper construction."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run() -> list[dict]:
+    rows = []
+    for ds in ("sift-like", "deep-like"):
+        x, q, gt = common.dataset(ds)
+        for method, k_limit in (("rnn-descent", 32), ("nn-descent", 32),
+                                ("nsg-style", 24)):
+            _, g = common.build_timed(method, x)
+            for r in common.search_sweep(x, g, q, gt, k_limit):
+                rows.append({"bench": "search", "dataset": ds, "method": method, **r})
+                common.emit(
+                    f"search/{ds}/{method}/L{r['L']}",
+                    1e6 / max(r["qps"], 1e-9),
+                    f"recall@1={r['recall_at_1']},qps={r['qps']}",
+                )
+    common.save_json("bench_search", rows)
+    return rows

@@ -1,0 +1,35 @@
+"""Paper Figures 6/7: (T1, T2) ablation at constant total sweep count.
+
+Claims validated: T1=1 (no reverse-edge phases) gives the worst recall;
+increasing T1 trades construction time for search quality."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+from benchmarks import common
+from repro.core import eval as E
+from repro.core import rnn_descent as rd
+from repro.core import search as S
+
+
+def run() -> list[dict]:
+    rows = []
+    x, q, gt = common.dataset("sift-like")
+    ep = S.default_entry_point(x)
+    scfg = S.SearchConfig(l=32, k=32, max_iters=96)
+    for t1, t2 in ((1, 12), (2, 6), (3, 4), (4, 3), (6, 2)):
+        cfg = dataclasses.replace(common.RNND_CFG, t1=t1, t2=t2)
+        jax.block_until_ready(rd.build(x[:1024], cfg, jax.random.PRNGKey(1)))
+        t0 = time.perf_counter()
+        g = jax.block_until_ready(rd.build(x, cfg, jax.random.PRNGKey(1)))
+        sec = time.perf_counter() - t0
+        ids, _ = S.search(x, g, q, ep, scfg)
+        rec = E.recall_at_k(ids, gt)
+        rows.append({"bench": "t1t2", "t1": t1, "t2": t2,
+                     "seconds": round(sec, 3), "recall_at_1": round(rec, 4)})
+        common.emit(f"t1t2/T1={t1},T2={t2}", sec * 1e6, f"recall@1={rec:.4f}")
+    common.save_json("bench_t1t2", rows)
+    return rows

@@ -1,0 +1,99 @@
+"""Shared benchmark substrate: datasets, builders, timing, CSV emission.
+
+Scale note: the container is a single CPU core, so corpus sizes are scaled
+down from the paper's 1M/20M (dimensionalities preserved: 128/960/96). The
+1M-point configurations are exercised structurally via the dry-run
+(rnnd-ann cells). Relative ordering between methods — the paper's actual
+claim — is what these benchmarks measure.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import eval as E
+from repro.core import graph as G
+from repro.core import nn_descent as nnd
+from repro.core import nsg_style
+from repro.core import rnn_descent as rd
+from repro.core import search as S
+from repro.data.synthetic import VectorDatasetSpec, clustered_vectors
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+# CPU-feasible stand-ins for the paper's Table 1 (dims preserved)
+DATASETS = {
+    "sift-like": VectorDatasetSpec("sift-like", n=6000, d=128, n_queries=400,
+                                   n_clusters=48),
+    "gist-like": VectorDatasetSpec("gist-like", n=2000, d=960, n_queries=200,
+                                   n_clusters=32),
+    "deep-like": VectorDatasetSpec("deep-like", n=6000, d=96, n_queries=400,
+                                   n_clusters=48),
+}
+
+# paper §5.1 parameters, scaled to corpus size (paper: S=20 R=96 T1=4 T2=15
+# at n=1M; the R/S scale-down keeps R ~ sqrt-ish of n so degree caps bind the
+# same way)
+RNND_CFG = rd.RNNDescentConfig(s=12, r=48, t1=4, t2=6, capacity=64, chunk=512)
+NND_CFG = nnd.NNDescentConfig(k=32, s=12, iters=8, chunk=256)
+NSG_CFG = nsg_style.NSGStyleConfig(r=24, c=64, knn=nnd.NNDescentConfig(
+    k=32, s=12, iters=8, chunk=256))
+SEARCH_L_SWEEP = (8, 16, 32, 64, 128)
+
+
+def dataset(name: str, key=0):
+    x, q = clustered_vectors(jax.random.PRNGKey(key), DATASETS[name])
+    _, gt = E.ground_truth(x, q, k=1)
+    return x, q, gt
+
+
+def build_timed(builder: str, x, key=1):
+    """Returns (seconds, graph). Compile excluded via a warmup on a slice."""
+    k = jax.random.PRNGKey(key)
+    fns = {
+        "rnn-descent": lambda xx: rd.build(xx, RNND_CFG, k),
+        "nn-descent": lambda xx: nnd.build(xx, NND_CFG, k),
+        "nsg-style": lambda xx: nsg_style.build(xx, NSG_CFG, k),
+    }
+    fn = fns[builder]
+    jax.block_until_ready(fn(x[: max(512, x.shape[0] // 4)]))   # warm compile
+    t0 = time.perf_counter()
+    g = jax.block_until_ready(fn(x))
+    return time.perf_counter() - t0, g
+
+
+def search_sweep(x, g, q, gt, k_limit: int, l_values=SEARCH_L_SWEEP):
+    """(L, recall@1, qps) rows for one graph."""
+    ep = S.default_entry_point(x)
+    rows = []
+    for L in l_values:
+        cfg = S.SearchConfig(l=L, k=k_limit, max_iters=2 * L + 32)
+        ids, _ = S.search(x, g, q, ep, cfg)             # compile warmup
+        jax.block_until_ready(ids)
+        t0 = time.perf_counter()
+        ids, _ = S.search(x, g, q, ep, cfg)
+        jax.block_until_ready(ids)
+        dt = time.perf_counter() - t0
+        rows.append({
+            "L": L,
+            "recall_at_1": round(E.recall_at_k(ids, gt), 4),
+            "qps": round(q.shape[0] / dt, 1),
+        })
+    return rows
+
+
+def emit(name: str, us_per_call: float, derived: str) -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def save_json(name: str, payload) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=str)

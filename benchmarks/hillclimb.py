@@ -1,0 +1,72 @@
+"""Hillclimb harness: measure one cell's roofline terms under config
+overrides (the hypothesis->change->measure loop of EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch yi-34b --shape train_4k \
+        --set scan_groups=1 --set cast_params_once=False
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg field override: name=value (int/float/bool)")
+    args = ap.parse_args()
+
+    import jax
+    from repro import configs
+    from repro.distributed import sharding as sh
+    from repro.launch import steps
+    from repro.launch.hlo_analysis import collective_summary, module_costs
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh()
+    arch = configs.get(args.arch)
+    bound = steps.bind(arch, args.shape, reduced=False, mesh=mesh)
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=")
+        overrides[k] = {"True": True, "False": False}.get(v) if v in ("True", "False") \
+            else (float(v) if "." in v else int(v)) if v.replace(".", "").lstrip("-").isdigit() else v
+    if overrides:
+        cfg = dataclasses.replace(bound.cfg, **overrides)
+        bound = steps.bind_with_cfg(arch, args.shape, cfg, mesh)
+
+    in_sh = (sh.tree_shardings(mesh, bound.state_axes) if bound.state_axes
+             else jax.tree.map(lambda _: None, bound.abstract_state()),
+             sh.tree_shardings(mesh, bound.batch_axes))
+    out_sh = (in_sh[0], None) if bound.kind == "train" else None
+    jitted = jax.jit(bound.step_fn, in_shardings=in_sh, out_shardings=out_sh)
+    comp = jitted.lower(bound.abstract_state(), bound.input_specs).compile()
+    hlo = comp.as_text()
+    mem = comp.memory_analysis()
+    costs = module_costs(hlo, mesh.devices.size)
+    coll = collective_summary(hlo, mesh.devices.size)
+    res = {
+        "overrides": overrides,
+        "temp_gb": round(mem.temp_size_in_bytes / 1e9, 1),
+        "coll_gb": round(coll["total_bytes_per_device"] / 1e9, 1),
+        "coll_by_op_gb": {k: round(v / 1e9, 1) for k, v in coll["bytes_by_op"].items()},
+        "flops": costs["dot_flops_per_device"],
+        "traffic_tpu": costs["traffic_tpu_bytes_per_device"],
+        "terms_s": {
+            "compute": round(costs["dot_flops_per_device"] / 197e12, 2),
+            "memory": round(costs["traffic_tpu_bytes_per_device"] / 819e9, 2),
+            "collective": round(coll["total_bytes_per_device"] / 100e9, 2),
+        },
+    }
+    print(json.dumps(res))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Roofline report: three terms per (arch x shape) cell from the dry-run
+artifacts (benchmarks/results/dryrun_singlepod.json).
+
+    compute term    = dot_flops_per_device / peak_FLOPs        [s]
+    memory term     = traffic_tpu_bytes_per_device / HBM_bw    [s]
+    collective term = collective_wire_bytes_per_device / ICI   [s]
+
+Hardware constants (TPU v5e-like): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI with 2 usable links per mesh axis -> 100 GB/s per device
+aggregate (collective bytes are already per-device wire bytes with ring
+factors applied). MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--json path] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 100e9   # 2 usable 50 GB/s links per device participating per collective
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def model_flops(arch_id: str, shape_name: str, kind: str) -> float | None:
+    """Analytic MODEL_FLOPS for the whole step (all devices)."""
+    from repro import configs
+    arch = configs.get(arch_id)
+    cfg = arch.make_config(shape_name, False)
+    shape = arch.shape(shape_name)
+    if arch.family == "lm":
+        n_act = cfg.n_active_params
+        if kind == "train":
+            toks = shape.dims["batch"] * shape.dims["seq"]
+            return 6.0 * n_act * toks       # fwd 2ND + bwd 4ND
+        if kind == "prefill":
+            toks = shape.dims["batch"] * shape.dims["seq"]
+            return 2.0 * n_act * toks
+        return 2.0 * n_act * shape.dims["batch"]   # decode: one token/request
+    if arch.family == "recsys":
+        # dominant: embedding gather is bandwidth; interaction+MLP flops
+        return None
+    return None
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows_from(results: dict) -> list[dict]:
+    out = []
+    for key, r in sorted(results.items()):
+        if not r.get("ok"):
+            out.append({"cell": key, "ok": False, "error": (r.get("error") or "")[:120]})
+            continue
+        cost = r.get("cost", {})
+        coll = r.get("collectives", {})
+        flops_pd = cost.get("dot_flops_per_device", 0.0)
+        mem_pd = cost.get("traffic_tpu_bytes_per_device", 0.0)
+        coll_pd = coll.get("total_bytes_per_device", 0.0)
+        t_c = flops_pd / PEAK_FLOPS
+        t_m = mem_pd / HBM_BW
+        t_n = coll_pd / ICI_BW
+        terms = {"compute": t_c, "memory": t_m, "collective": t_n}
+        bottleneck = max(terms, key=terms.get)
+        mf = model_flops(r["arch"], r["shape"], r.get("kind", ""))
+        n_dev = r.get("n_devices", 256)
+        useful = (mf / (flops_pd * n_dev)) if (mf and flops_pd) else None
+        bound = max(t_c, t_m, t_n)
+        out.append({
+            "cell": key, "ok": True, "kind": r.get("kind"),
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+            "bottleneck": bottleneck,
+            "roofline_fraction": (t_c / bound) if bound > 0 else None,
+            "model_flops": mf,
+            "useful_flops_ratio": useful,
+            "temp_gb": (r.get("memory", {}).get("temp_bytes") or 0) / 1e9,
+            "fits_hbm": ((r.get("memory", {}).get("temp_bytes") or 0)
+                         + (r.get("memory", {}).get("argument_bytes") or 0)) < 16e9,
+        })
+    return out
+
+
+def markdown(rows: list[dict]) -> str:
+    lines = [
+        "| cell | kind | compute s | memory s | collective s | bottleneck | "
+        "roofline frac | useful-FLOP ratio | temp GB | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if not r.get("ok"):
+            lines.append(f"| {r['cell']} | FAIL | | | | {r.get('error','')} | | | | |")
+            continue
+        fr = r["roofline_fraction"]
+        uf = r["useful_flops_ratio"]
+        lines.append(
+            f"| {r['cell']} | {r['kind']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['bottleneck']} | "
+            f"{fr:.2f} | {uf:.2f}" if uf else
+            f"| {r['cell']} | {r['kind']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['bottleneck']} | "
+            f"{fr:.2f} | n/a")
+        lines[-1] += f" | {r['temp_gb']:.1f} | {'y' if r['fits_hbm'] else 'NO'} |"
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=os.path.join(RESULTS, "dryrun_singlepod.json"))
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = rows_from(load(args.json))
+    if args.markdown:
+        print(markdown(rows))
+    else:
+        print(json.dumps(rows, indent=1))
+    with open(os.path.join(RESULTS, "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Compare all three builders (paper Figures 2+3 in miniature): construction
+time and the QPS/recall tradeoff on the same corpus.
+
+    PYTHONPATH=src python examples/build_and_search.py
+"""
+import time
+
+import jax
+
+from repro.core import eval as E
+from repro.core import graph as G
+from repro.core import nn_descent as nnd
+from repro.core import nsg_style
+from repro.core import rnn_descent as rd
+from repro.core import search as S
+from repro.data.synthetic import VectorDatasetSpec, clustered_vectors
+
+x, q = clustered_vectors(
+    jax.random.PRNGKey(0),
+    VectorDatasetSpec("demo", n=6000, d=96, n_queries=400, n_clusters=48))
+_, gt = E.ground_truth(x, q, k=1)
+entry = S.default_entry_point(x)
+
+builders = {
+    "rnn-descent": lambda: rd.build(
+        x, rd.RNNDescentConfig(s=12, r=48, t1=4, t2=6, capacity=64),
+        jax.random.PRNGKey(1)),
+    "nn-descent": lambda: nnd.build(
+        x, nnd.NNDescentConfig(k=32, s=12, iters=8), jax.random.PRNGKey(1)),
+    "nsg-style": lambda: nsg_style.build(
+        x, nsg_style.NSGStyleConfig(
+            r=24, c=64, knn=nnd.NNDescentConfig(k=32, s=12, iters=8)),
+        jax.random.PRNGKey(1)),
+}
+
+for name, build in builders.items():
+    jax.block_until_ready(build())        # warm the compile cache
+    t0 = time.perf_counter()
+    g = jax.block_until_ready(build())
+    sec = time.perf_counter() - t0
+    ids, _ = S.search(x, g, q, entry, S.SearchConfig(l=48, k=32, max_iters=128))
+    print(f"{name:12s} build {sec:6.2f}s  recall@1 {E.recall_at_k(ids, gt):.4f}  "
+          f"avg-out-degree {float(G.average_out_degree(g)):.1f}")

@@ -1,0 +1,5 @@
+from repro.checkpoint.checkpoint import (
+    committed_steps, latest_step, restore, save,
+)
+
+__all__ = ["committed_steps", "latest_step", "restore", "save"]

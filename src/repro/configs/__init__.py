@@ -1,0 +1,31 @@
+"""Architecture registry: ``--arch <id>`` resolution for launch/benchmarks."""
+from repro.configs import (
+    base, dbrx_132b, deepfm, deepseek_moe_16b, dimenet, fm, granite_20b,
+    minitron_4b, rnnd_ann, wide_deep, xdeepfm, yi_34b,
+)
+from repro.configs.base import Arch, ShapeSpec
+
+_MODULES = (
+    dbrx_132b, deepseek_moe_16b, yi_34b, granite_20b, minitron_4b,
+    dimenet, wide_deep, deepfm, fm, xdeepfm, rnnd_ann,
+)
+
+REGISTRY: dict[str, Arch] = {m.ARCH.arch_id: m.ARCH for m in _MODULES}
+
+# the 10 assigned architectures (rnnd-ann is the paper's own, supplementary)
+ASSIGNED = [a for a in REGISTRY if a != "rnnd-ann"]
+
+
+def get(arch_id: str) -> Arch:
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[arch_id]
+
+
+def all_cells(include_ann: bool = False) -> list[tuple[str, str]]:
+    """Every (arch_id, shape_name) pair — the dry-run grid (40 cells)."""
+    out = []
+    for aid in (list(REGISTRY) if include_ann else ASSIGNED):
+        for s in REGISTRY[aid].shapes:
+            out.append((aid, s.name))
+    return out

@@ -1,0 +1,293 @@
+"""Config/registry glue: each architecture = model config + shape set +
+input-spec builders for the dry-run and reduced smoke batches for CPU tests.
+
+Step kinds per cell:
+  train    -> jax.grad + AdamW update (train_step)
+  prefill  -> serve_step: full-sequence prefill, emits KV cache
+  decode   -> serve_step: one new token against a seq_len KV cache
+  serve    -> recsys forward (sigmoid scores)
+  retrieval-> recsys candidate scoring (1 query x n_candidates)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dimenet as dm
+from repro.models import recsys as rs
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                 # train | prefill | decode | serve | retrieval
+    dims: dict
+
+    def describe(self) -> str:
+        return f"{self.name}({self.kind}): " + ", ".join(f"{k}={v}" for k, v in self.dims.items())
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    arch_id: str
+    family: str               # lm | gnn | recsys | ann
+    shapes: tuple[ShapeSpec, ...]
+    make_config: Callable[[str | None, bool], Any]   # (shape_name, reduced) -> cfg
+
+    def shape(self, name: str) -> ShapeSpec:
+        for s in self.shapes:
+            if s.name == name:
+                return s
+        raise KeyError(f"{self.arch_id}: unknown shape {name!r}")
+
+
+# ------------------------------------------------------------------ LM glue
+LM_SHAPES = (
+    ShapeSpec("train_4k", "train", dict(seq=4096, batch=256)),
+    ShapeSpec("prefill_32k", "prefill", dict(seq=32768, batch=32)),
+    ShapeSpec("decode_32k", "decode", dict(seq=32768, batch=128)),
+    # decode against a 512k cache is O(seq), not O(seq^2) — runnable for the
+    # full-attention archs; the *prefill* at 500k is what gets skipped
+    # (DESIGN.md §4).
+    ShapeSpec("long_500k", "decode", dict(seq=524288, batch=1)),
+)
+
+LM_SMOKE = dict(seq=32, batch=2, cache=48)
+
+
+def lm_input_specs(cfg: tf.TransformerConfig, shape: ShapeSpec, reduced=False) -> dict:
+    if reduced:
+        b, s = LM_SMOKE["batch"], LM_SMOKE["seq"]
+        cache_len = LM_SMOKE["cache"]
+    else:
+        b, s = shape.dims["batch"], shape.dims["seq"]
+        cache_len = shape.dims["seq"]
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind == "train":
+        return {"tokens": tok, "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"tokens": tok}
+    if shape.kind == "decode":
+        cache_shape = (cfg.n_layers, b, cache_len, cfg.n_kv_heads, cfg.d_head)
+        return {
+            "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "cache": {
+                "k": jax.ShapeDtypeStruct(cache_shape, cfg.compute_dtype),
+                "v": jax.ShapeDtypeStruct(cache_shape, cfg.compute_dtype),
+                "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+            },
+        }
+    raise ValueError(shape.kind)
+
+
+def lm_smoke_batch(key, cfg: tf.TransformerConfig, shape: ShapeSpec) -> dict:
+    specs = lm_input_specs(cfg, shape, reduced=True)
+    b, s = LM_SMOKE["batch"], LM_SMOKE["seq"]
+    if shape.kind == "train":
+        t = jax.random.randint(key, (b, s + 1), 0, cfg.vocab, jnp.int32)
+        return {"tokens": t[:, :-1], "labels": t[:, 1:]}
+    if shape.kind == "prefill":
+        return {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab, jnp.int32)}
+    cache = tf.init_cache(cfg, b, LM_SMOKE["cache"])
+    cache["pos"] = jnp.full((b,), LM_SMOKE["cache"] // 2, jnp.int32)
+    cache["k"] = jax.random.normal(key, cache["k"].shape, cfg.compute_dtype) * 0.02
+    cache["v"] = jax.random.normal(key, cache["v"].shape, cfg.compute_dtype) * 0.02
+    return {"tokens": jax.random.randint(key, (b,), 0, cfg.vocab, jnp.int32),
+            "cache": cache}
+
+
+def make_lm_arch(arch_id: str, full: tf.TransformerConfig, smoke: tf.TransformerConfig) -> Arch:
+    def make_config(shape_name, reduced):
+        return smoke if reduced else full
+    return Arch(arch_id, "lm", LM_SHAPES, make_config)
+
+
+def pad_to(n: int, mult: int = 4096) -> int:
+    """Round a sharded-dimension size up to a grid-friendly multiple (every
+    mesh factorization up to 512 devices divides 4096). Pipelines mask-pad;
+    models consume the masks (edge_mask / triplet_mask / score masking)."""
+    return -(-n // mult) * mult
+
+
+# ----------------------------------------------------------------- GNN glue
+GNN_SHAPES = (
+    ShapeSpec("full_graph_sm", "train",
+              dict(n_nodes=2708, n_edges=pad_to(10556), d_feat=1433, n_out=7,
+                   triplets=pad_to(8 * 10556), impl="gather")),
+    ShapeSpec("minibatch_lg", "train",
+              dict(n_nodes=1024 * 166, n_edges=pad_to(1024 * 165), d_feat=602,
+                   n_out=41, seeds=1024, fanout=(15, 10), impl="factorized",
+                   edge_chunks=1)),
+    ShapeSpec("ogb_products", "train",
+              dict(n_nodes=2449029, n_edges=pad_to(61859140), d_feat=100,
+                   n_out=47, impl="factorized", edge_chunks=8)),
+    ShapeSpec("molecule", "train",
+              dict(n_nodes=128 * 30, n_edges=128 * 64, d_feat=16, n_out=1,
+                   n_graphs=128, triplets=8 * 128 * 64, impl="gather",
+                   task="graph_reg")),
+)
+
+GNN_SMOKE_NODE_SCALE = 64    # nodes divided by this in smoke tests
+GNN_SMOKE_EDGE_SCALE = 256   # edges/triplets divided by this in smoke tests
+
+
+def gnn_input_specs(cfg: dm.DimeNetConfig, shape: ShapeSpec, reduced=False) -> dict:
+    d = dict(shape.dims)
+    n, e = d["n_nodes"], d["n_edges"]
+    if reduced:
+        n = max(n // GNN_SMOKE_NODE_SCALE, 32)
+        e = max(e // GNN_SMOKE_EDGE_SCALE, 64)
+    f32, i32 = jnp.float32, jnp.int32
+    # factorized cells stream edges: arrays arrive (chunks, ce) with 'data'
+    # sharded on ce (the chunk axis is replicated and lax.scan'ed)
+    cch = d.get("edge_chunks", 1)
+    ce = e // cch
+    e = cch * ce
+    eshape = (cch, ce) if d["impl"] == "factorized" else (e,)
+    specs = {
+        "node_feat": jax.ShapeDtypeStruct((n, d["d_feat"]), f32),
+        "pos": jax.ShapeDtypeStruct((n, 3), f32),
+        "edge_src": jax.ShapeDtypeStruct(eshape, i32),
+        "edge_dst": jax.ShapeDtypeStruct(eshape, i32),
+        "edge_mask": jax.ShapeDtypeStruct(eshape, f32),
+    }
+    if d.get("task") == "graph_reg":
+        ng = d["n_graphs"] if not reduced else max(d["n_graphs"] // 16, 2)
+        specs["graph_ids"] = jax.ShapeDtypeStruct((n,), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((ng,), f32)
+        specs["node_mask"] = jax.ShapeDtypeStruct((n,), f32)
+    else:
+        specs["labels"] = jax.ShapeDtypeStruct((n,), i32)
+        specs["label_mask"] = jax.ShapeDtypeStruct((n,), f32)
+    if d["impl"] == "gather":
+        t = d["triplets"] if not reduced else max(d["triplets"] // GNN_SMOKE_EDGE_SCALE, 64)
+        specs["triplet_kj"] = jax.ShapeDtypeStruct((t,), i32)
+        specs["triplet_ji"] = jax.ShapeDtypeStruct((t,), i32)
+        specs["triplet_mask"] = jax.ShapeDtypeStruct((t,), f32)
+    return specs
+
+
+def gnn_smoke_batch(key, cfg: dm.DimeNetConfig, shape: ShapeSpec) -> dict:
+    specs = gnn_input_specs(cfg, shape, reduced=True)
+    ks = iter(jax.random.split(key, 16))
+    d = dict(shape.dims)
+    n = specs["node_feat"].shape[0]
+    eshape = specs["edge_src"].shape
+    batch = {
+        "node_feat": jax.random.normal(next(ks), (n, d["d_feat"]), jnp.float32),
+        "pos": jax.random.normal(next(ks), (n, 3)) * 2.0,
+        "edge_src": jax.random.randint(next(ks), eshape, 0, n, jnp.int32),
+        "edge_dst": jax.random.randint(next(ks), eshape, 0, n, jnp.int32),
+        "edge_mask": jnp.ones(eshape, jnp.float32),
+    }
+    batch["edge_dst"] = jnp.where(batch["edge_dst"] == batch["edge_src"],
+                                  (batch["edge_dst"] + 1) % n, batch["edge_dst"])
+    if d.get("task") == "graph_reg":
+        ng = specs["labels"].shape[0]
+        batch["graph_ids"] = jnp.clip(jnp.arange(n) * ng // n, 0, ng - 1).astype(jnp.int32)
+        batch["labels"] = jax.random.normal(next(ks), (ng,))
+        batch["node_mask"] = jnp.ones((n,), jnp.float32)
+    else:
+        batch["labels"] = jax.random.randint(next(ks), (n,), 0, d["n_out"], jnp.int32)
+        batch["label_mask"] = jnp.ones((n,), jnp.float32)
+    if d["impl"] == "gather":
+        t = specs["triplet_kj"].shape[0]
+        n_e = int(jnp.prod(jnp.asarray(eshape)))
+        batch["triplet_kj"] = jax.random.randint(next(ks), (t,), 0, n_e, jnp.int32)
+        batch["triplet_ji"] = jax.random.randint(next(ks), (t,), 0, n_e, jnp.int32)
+        batch["triplet_mask"] = jnp.ones((t,), jnp.float32)
+    return batch
+
+
+def make_gnn_arch(arch_id: str, base: dm.DimeNetConfig, smoke: dm.DimeNetConfig) -> Arch:
+    def make_config(shape_name, reduced):
+        tmpl = smoke if reduced else base
+        if shape_name is None:
+            return tmpl
+        d = dict(next(s for s in GNN_SHAPES if s.name == shape_name).dims)
+        return dataclasses.replace(
+            tmpl, d_feat=d["d_feat"], n_out=d["n_out"],
+            task=d.get("task", "node_class"), triplet_impl=d["impl"],
+            edge_chunks=d.get("edge_chunks", 1))
+    return Arch(arch_id, "gnn", GNN_SHAPES, make_config)
+
+
+# -------------------------------------------------------------- recsys glue
+RECSYS_SHAPES = (
+    ShapeSpec("train_batch", "train", dict(batch=65536)),
+    ShapeSpec("serve_p99", "serve", dict(batch=512)),
+    ShapeSpec("serve_bulk", "serve", dict(batch=262144)),
+    ShapeSpec("retrieval_cand", "retrieval", dict(batch=1, n_candidates=1_000_000)),
+)
+
+RECSYS_SMOKE = dict(batch=32, n_candidates=2048)
+
+
+def recsys_input_specs(cfg: rs.RecsysConfig, shape: ShapeSpec, reduced=False) -> dict:
+    b = RECSYS_SMOKE["batch"] if reduced else shape.dims["batch"]
+    if shape.kind == "retrieval":
+        nc = RECSYS_SMOKE["n_candidates"] if reduced else pad_to(shape.dims["n_candidates"])
+        return {
+            "query_emb": jax.ShapeDtypeStruct((cfg.embed_dim,), jnp.float32),
+            "cand_embs": jax.ShapeDtypeStruct((nc, cfg.embed_dim), jnp.float32),
+        }
+    specs = {
+        "sparse_ids": jax.ShapeDtypeStruct((b, cfg.n_fields, cfg.multi_hot), jnp.int32),
+        "dense": jax.ShapeDtypeStruct((b, cfg.n_dense), jnp.float32),
+    }
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b,), jnp.float32)
+    return specs
+
+
+def recsys_smoke_batch(key, cfg: rs.RecsysConfig, shape: ShapeSpec) -> dict:
+    specs = recsys_input_specs(cfg, shape, reduced=True)
+    ks = jax.random.split(key, 4)
+    if shape.kind == "retrieval":
+        return {
+            "query_emb": jax.random.normal(ks[0], specs["query_emb"].shape),
+            "cand_embs": jax.random.normal(ks[1], specs["cand_embs"].shape),
+        }
+    b = specs["sparse_ids"].shape[0]
+    vmin = min(cfg.vocab_sizes)
+    batch = {
+        "sparse_ids": jax.random.randint(ks[0], specs["sparse_ids"].shape, 0, vmin, jnp.int32),
+        "dense": jax.random.normal(ks[1], specs["dense"].shape),
+    }
+    if shape.kind == "train":
+        batch["labels"] = jax.random.bernoulli(ks[2], 0.3, (b,)).astype(jnp.float32)
+    return batch
+
+
+def criteo_vocab_sizes(n_fields: int, reduced: bool = False) -> tuple[int, ...]:
+    """Deterministic Criteo-like vocab mix: few huge fields, long small tail.
+    The last field is padded so the stacked table's row count is shardable
+    over every mesh factorization (row-sharded embedding tables)."""
+    big = [10_000_000, 4_000_000, 1_000_000, 1_000_000]
+    mid = [100_000] * 8 + [10_000] * 10
+    small = [1_000] * 9 + [100] * 8
+    sizes = (big + mid + small) * 2
+    sizes = list(sizes[:n_fields])
+    if reduced:
+        sizes = [min(s, 1000) for s in sizes]
+    total = sum(sizes)
+    sizes[-1] += pad_to(total) - total
+    return tuple(sizes)
+
+
+def make_recsys_arch(arch_id: str, full: rs.RecsysConfig, smoke: rs.RecsysConfig) -> Arch:
+    def make_config(shape_name, reduced):
+        return smoke if reduced else full
+    return Arch(arch_id, "recsys", RECSYS_SHAPES, make_config)
+
+
+# ----------------------------------------------------------- ANN (the paper)
+ANN_SHAPES = (
+    ShapeSpec("build_1m", "ann_build", dict(n=1_000_000, d=128)),
+    ShapeSpec("build_gist", "ann_build", dict(n=1_000_000, d=960)),
+    ShapeSpec("search_1m", "ann_search", dict(n=1_000_000, d=128, queries=10_000)),
+)

@@ -1,0 +1,22 @@
+"""Core library: the paper's contribution (RNN-Descent) + baselines.
+
+Public API:
+    rnn_descent.build / build_jit / RNNDescentConfig     (the paper, Alg. 4-6)
+    nn_descent.build / NNDescentConfig                   (baseline, Alg. 2)
+    nsg_style.build / NSGStyleConfig                     (refinement baseline)
+    search.search / SearchConfig                         (Alg. 1 + Eq. 4)
+    graph.Graph                                          (fixed-degree adjacency)
+    eval.ground_truth / recall_at_k / degree_stats
+"""
+from repro.core import distances, eval, graph, nn_descent, nsg_style, rng, rnn_descent, search
+from repro.core.graph import Graph
+from repro.core.nn_descent import NNDescentConfig
+from repro.core.nsg_style import NSGStyleConfig
+from repro.core.rnn_descent import RNNDescentConfig
+from repro.core.search import SearchConfig
+
+__all__ = [
+    "distances", "eval", "graph", "nn_descent", "nsg_style", "rng",
+    "rnn_descent", "search", "Graph", "NNDescentConfig", "NSGStyleConfig",
+    "RNNDescentConfig", "SearchConfig",
+]

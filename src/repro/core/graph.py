@@ -1,0 +1,206 @@
+"""Fixed-capacity adjacency graphs for TPU-native graph-ANN algorithms.
+
+The paper's C++ implementation mutates per-vertex ``std::vector`` adjacency
+under locks. On TPU we keep a dense ``(n, M)`` adjacency with ``-1`` padding
+and express every structural mutation (edge insertion, degree capping,
+reverse-edge addition) as sort + segment-position + conflict-free scatter over
+a flat edge list. All shapes are static; all ops are jit-able.
+
+Row invariant maintained everywhere: valid entries first, ascending distance.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEW = jnp.uint8(1)
+OLD = jnp.uint8(0)
+
+
+class Graph(NamedTuple):
+    """neighbors: (n, M) int32 ids (-1 pad) | dists: (n, M) f32 (+inf pad)
+    | flags: (n, M) uint8 (1 = "new")."""
+
+    neighbors: jnp.ndarray
+    dists: jnp.ndarray
+    flags: jnp.ndarray
+
+    @property
+    def n(self) -> int:
+        return self.neighbors.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.neighbors.shape[1]
+
+
+def empty_graph(n: int, m: int) -> Graph:
+    return Graph(
+        neighbors=jnp.full((n, m), -1, jnp.int32),
+        dists=jnp.full((n, m), jnp.inf, jnp.float32),
+        flags=jnp.zeros((n, m), jnp.uint8),
+    )
+
+
+def sort_rows(g: Graph) -> Graph:
+    """Restore the row invariant (valid-first, ascending distance)."""
+    order = jnp.argsort(g.dists, axis=1)
+    return Graph(
+        neighbors=jnp.take_along_axis(g.neighbors, order, axis=1),
+        dists=jnp.take_along_axis(g.dists, order, axis=1),
+        flags=jnp.take_along_axis(g.flags, order, axis=1),
+    )
+
+
+def dedup_row_ids(ids: jnp.ndarray) -> jnp.ndarray:
+    """Per-row id dedup: repeats become -1 (row order not preserved —
+    callers re-sort by distance afterwards)."""
+    s = jnp.sort(ids, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(s[:, :1], bool), s[:, 1:] == s[:, :-1]], axis=1
+    )
+    return jnp.where(dup, -1, s)
+
+
+def to_edge_list(g: Graph) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(src, dst, dist, flag) flat views; invalid slots have dst == -1."""
+    n, m = g.neighbors.shape
+    src = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, m)).reshape(-1)
+    dst = g.neighbors.reshape(-1)
+    dist = g.dists.reshape(-1)
+    flag = g.flags.reshape(-1)
+    src = jnp.where(dst >= 0, src, jnp.int32(n))  # invalid -> sentinel segment
+    return src, dst, dist, flag
+
+
+def _segment_positions(sorted_keys: jnp.ndarray) -> jnp.ndarray:
+    """Position of each element within its run of equal keys (keys sorted)."""
+    seg_start = jnp.searchsorted(sorted_keys, sorted_keys, side="left")
+    return jnp.arange(sorted_keys.shape[0]) - seg_start
+
+
+def dedup_edges(
+    src: jnp.ndarray, dst: jnp.ndarray, dist: jnp.ndarray, flag: jnp.ndarray,
+    priority: jnp.ndarray, n: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Drop duplicate (src, dst) pairs, keeping the lowest-priority copy
+    (priority 0 = pre-existing edge, so existing edges keep their flags).
+    Dropped / invalid entries are neutralized to (n, -1, +inf, OLD)."""
+    order = jnp.lexsort((priority, dst, src))
+    s, d, w, f = src[order], dst[order], dist[order], flag[order]
+    dup = jnp.concatenate(
+        [jnp.array([False]), (s[1:] == s[:-1]) & (d[1:] == d[:-1])]
+    )
+    invalid = (d < 0) | (s >= n) | dup | (s == d)  # no self loops ever
+    return (
+        jnp.where(invalid, jnp.int32(n), s),
+        jnp.where(invalid, jnp.int32(-1), d),
+        jnp.where(invalid, jnp.inf, w),
+        jnp.where(invalid, OLD, f),
+    )
+
+
+def cap_by_key(
+    key: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray, dist: jnp.ndarray,
+    flag: jnp.ndarray, cap: int, n: int,
+) -> tuple[jnp.ndarray, ...]:
+    """Keep at most ``cap`` shortest edges per value of ``key`` (e.g. per
+    source vertex for out-degree, per destination for in-degree)."""
+    key = jnp.where((dst < 0) | (key < 0) | (key >= n), jnp.int32(n), key)
+    order = jnp.lexsort((dist, key))
+    k, s, d, w, f = key[order], src[order], dst[order], dist[order], flag[order]
+    pos = _segment_positions(k)
+    drop = (pos >= cap) | (k >= n) | (d < 0)
+    return (
+        jnp.where(drop, jnp.int32(n), s),
+        jnp.where(drop, jnp.int32(-1), d),
+        jnp.where(drop, jnp.inf, w),
+        jnp.where(drop, OLD, f),
+        jnp.where(drop, jnp.int32(0), pos),
+        k,
+    )
+
+
+def edges_to_graph(
+    src: jnp.ndarray, dst: jnp.ndarray, dist: jnp.ndarray, flag: jnp.ndarray,
+    n: int, m: int, cap: int | None = None,
+) -> Graph:
+    """Scatter a flat edge list into (n, m) rows, keeping the ``cap``
+    (default m) shortest edges per row — the paper's out-degree cap."""
+    s, d, w, f, pos, seg = cap_by_key(src, src, dst, dist, flag, min(cap or m, m), n)
+    g = empty_graph(n, m)
+    ok = (s < n) & (d >= 0)
+    row = jnp.where(ok, s, n)  # out-of-bounds rows dropped by mode="drop"
+    return Graph(
+        neighbors=g.neighbors.at[row, pos].set(d, mode="drop"),
+        dists=g.dists.at[row, pos].set(w, mode="drop"),
+        flags=g.flags.at[row, pos].set(f, mode="drop"),
+    )
+
+
+def merge_candidate_edges(
+    g: Graph,
+    cand_src: jnp.ndarray,
+    cand_dst: jnp.ndarray,
+    cand_dist: jnp.ndarray,
+    cap: int | None = None,
+) -> Graph:
+    """Insert candidate edges (flagged NEW) into ``g``'s rows.
+
+    Pre-existing (src, dst) duplicates win (keep their flag, per paper Alg. 4:
+    "the algorithm adds no edges if the edge already exists"). Each row keeps
+    its ``cap`` (default capacity) shortest edges afterwards."""
+    n, m = g.neighbors.shape
+    cap = m if cap is None else cap
+    es, ed, ew, ef = to_edge_list(g)
+    src = jnp.concatenate([es, jnp.where(cand_dst >= 0, cand_src, n).astype(jnp.int32)])
+    dst = jnp.concatenate([ed, cand_dst.astype(jnp.int32)])
+    dist = jnp.concatenate([ew, cand_dist])
+    flag = jnp.concatenate([ef, jnp.full(cand_dst.shape, NEW)])
+    prio = jnp.concatenate(
+        [jnp.zeros_like(es), jnp.ones_like(cand_src, dtype=jnp.int32)]
+    )
+    src, dst, dist, flag = dedup_edges(src, dst, dist, flag, prio, n)
+    return edges_to_graph(src, dst, dist, flag, n, cap)
+
+
+def add_reverse_edges(g: Graph, r: int) -> Graph:
+    """Paper Algorithm 5, vectorized.
+
+    E <- E ∪ reverse(E) (new edges flagged NEW), then cap in-degree to the R
+    shortest incoming edges per vertex, then cap out-degree likewise."""
+    n, m = g.neighbors.shape
+    es, ed, ew, ef = to_edge_list(g)
+    # reversed copies: (dst -> src); invalid stay invalid
+    rs = jnp.where(ed >= 0, ed, n).astype(jnp.int32)
+    rd = jnp.where(ed >= 0, jnp.where(es < n, es, -1), -1).astype(jnp.int32)
+    src = jnp.concatenate([es, rs])
+    dst = jnp.concatenate([ed, rd])
+    dist = jnp.concatenate([ew, ew])
+    flag = jnp.concatenate([ef, jnp.full_like(ef, NEW)])
+    prio = jnp.concatenate([jnp.zeros_like(es), jnp.ones_like(rs)])
+    src, dst, dist, flag = dedup_edges(src, dst, dist, flag, prio, n)
+    # in-degree cap (keep R shortest incoming)
+    src, dst, dist, flag, _, _ = cap_by_key(dst, src, dst, dist, flag, r, n)
+    # out-degree cap R + scatter back into rows
+    return edges_to_graph(src, dst, dist, flag, n, m, cap=r)
+
+
+def out_degrees(g: Graph) -> jnp.ndarray:
+    return jnp.sum(g.neighbors >= 0, axis=1)
+
+
+def in_degrees(g: Graph) -> jnp.ndarray:
+    flat = g.neighbors.reshape(-1)
+    w = (flat >= 0).astype(jnp.int32)
+    return jnp.bincount(jnp.where(flat >= 0, flat, 0), weights=w, length=g.n).astype(jnp.int32)
+
+
+def average_out_degree(g: Graph, k: int | None = None) -> jnp.ndarray:
+    """Average out-degree, optionally under a query-time top-K limit (Table A)."""
+    deg = out_degrees(g)
+    if k is not None:
+        deg = jnp.minimum(deg, k)
+    return jnp.mean(deg.astype(jnp.float32))

@@ -1,0 +1,100 @@
+"""RNG Strategy (paper Algorithm 3) and its fused RNN-Descent variant.
+
+Both are the same triangular scan over a distance-sorted candidate list:
+
+    keep[i]  <=>  forall kept j < i :  d(u, v_i) < d(v_i, v_j)
+
+The paper walks the list sequentially with early exit; on TPU we run the scan
+as a ``lax.fori_loop`` over the (small, <=128) candidate axis, vectorized over
+a tile of vertices, with the candidate-pair distances coming from one Gram
+matmul on the MXU. The fused variant additionally returns, for every dropped
+candidate v, the kept neighbor w that dominated it — RNN-Descent (Alg. 4)
+turns that into the replacement edge (w -> v) that preserves reachability.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distances as D
+
+
+class RNGScanResult(NamedTuple):
+    keep: jnp.ndarray          # (C, M) bool — candidate survives the prune
+    redirect_w: jnp.ndarray    # (C, M) int32 — dominating kept neighbor id, -1 if kept
+    redirect_d: jnp.ndarray    # (C, M) f32 — d(v, w) for the replacement edge
+
+
+def rng_scan(
+    ids: jnp.ndarray,          # (C, M) int32, sorted ascending by dist, -1 pad
+    dists: jnp.ndarray,        # (C, M) f32 distances d(u, v_i)
+    pair: jnp.ndarray,         # (C, M, M) f32 candidate-pair distances d(v_i, v_j)
+    skip_pair: jnp.ndarray | None = None,   # (C, M, M) bool — True => pair cannot drop
+) -> RNGScanResult:
+    """Vectorized triangular RNG scan. ``skip_pair`` implements the paper's
+    new/old-flag optimization (old-old pairs were already verified and are
+    exempt from the check)."""
+    c, m = ids.shape
+    valid = ids >= 0
+    pair = jnp.where(valid[:, :, None] & valid[:, None, :], pair, jnp.inf)
+    if skip_pair is None:
+        skip_pair = jnp.zeros((c, m, m), bool)
+    rows = jnp.arange(c)
+
+    def body(i, carry):
+        keep, red_w, red_d = carry
+        # pair (i, j) causes a drop iff j already kept, pair not exempt, and
+        # d(u, v_i) >= d(v_i, v_j).  keep[:, j>=i] is still False here, so the
+        # triangular constraint j < i is implicit.
+        fail = keep & (~skip_pair[:, i, :]) & (pair[:, i, :] <= dists[:, i][:, None])
+        any_fail = jnp.any(fail, axis=1) & valid[:, i]   # padded slots never redirect
+        first_j = jnp.argmax(fail, axis=1)
+        keep_i = valid[:, i] & ~any_fail
+        keep = keep.at[:, i].set(keep_i)
+        red_w = red_w.at[:, i].set(
+            jnp.where(any_fail, ids[rows, first_j], jnp.int32(-1))
+        )
+        red_d = red_d.at[:, i].set(
+            jnp.where(any_fail, pair[rows, i, first_j], jnp.inf)
+        )
+        return keep, red_w, red_d
+
+    init = (
+        jnp.zeros((c, m), bool),
+        jnp.full((c, m), -1, jnp.int32),
+        jnp.full((c, m), jnp.inf, jnp.float32),
+    )
+    keep, red_w, red_d = jax.lax.fori_loop(0, m, body, init)
+    return RNGScanResult(keep, red_w, red_d)
+
+
+def rng_prune_rows(
+    x: jnp.ndarray,
+    ids: jnp.ndarray,
+    dists: jnp.ndarray,
+    metric: str = "l2",
+    chunk: int = 1024,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Plain RNG Strategy (Algorithm 3) over many rows: returns the keep mask.
+
+    Used by the NSG-style refinement baseline and as the oracle for the fused
+    kernel. Rows must be distance-sorted."""
+    n, m = ids.shape
+    pad = (-n) % chunk
+    ids_p = jnp.pad(ids, ((0, pad), (0, 0)), constant_values=-1)
+    dists_p = jnp.pad(dists, ((0, pad), (0, 0)), constant_values=jnp.inf)
+
+    def one_chunk(args):
+        cid, cdist = args
+        if use_pallas:
+            from repro.kernels.rng_prune import ops as rng_ops
+            return rng_ops.rng_prune(x, cid, cdist)[0]
+        vecs = x[jnp.maximum(cid, 0)]
+        pair = D.batched_gram(vecs, metric)
+        return rng_scan(cid, cdist, pair).keep
+
+    keep = jax.lax.map(one_chunk, (ids_p.reshape(-1, chunk, m), dists_p.reshape(-1, chunk, m)))
+    return keep.reshape(-1, m)[:n]

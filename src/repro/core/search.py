@@ -1,0 +1,97 @@
+"""Graph traversal search (paper Algorithm 1 + Eq. 4), batched over queries.
+
+Best-first beam search with beam width L. RNN-Descent does not limit the
+out-degree at build time; instead Eq. 4 truncates each visited vertex's
+adjacency to its K nearest *at query time* (rows are distance-sorted, so this
+is a prefix slice — zero-cost on TPU).
+
+TPU adaptation: the paper's while-loop with dynamic candidate set becomes a
+``lax.while_loop`` over fixed-shape state: a (B, L) beam (ids/dists/expanded)
+plus a (B, n) "inserted" bitmask for exact dedup. All queries in a batch step
+together; finished queries no-op until the whole batch converges.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distances as D
+from repro.core import graph as G
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    l: int = 64              # beam width (paper's L)
+    k: int = 32              # query-time out-degree limit (paper Eq. 4); <= capacity
+    max_iters: int = 256     # hard bound on expansions (paper loops to quiescence)
+    metric: str = "l2"
+    topk: int = 1            # results returned per query
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def search(
+    x: jnp.ndarray,
+    g: G.Graph,
+    queries: jnp.ndarray,
+    entry_points: jnp.ndarray,
+    cfg: SearchConfig,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (ids, dists) of shape (B, topk), ascending distance."""
+    n = x.shape[0]
+    b = queries.shape[0]
+    k = min(cfg.k, g.capacity)
+    rows = jnp.arange(b)
+
+    eps = jnp.broadcast_to(entry_points.reshape(-1)[:1], (b,)) if entry_points.ndim == 0 else entry_points
+    if eps.shape[0] != b:
+        eps = jnp.broadcast_to(eps[:1], (b,))
+    ep_d = jax.vmap(lambda q, e: D.point_to_points(q, x[e][None, :], cfg.metric)[0])(queries, eps)
+
+    beam_ids = jnp.full((b, cfg.l), -1, jnp.int32).at[:, 0].set(eps)
+    beam_d = jnp.full((b, cfg.l), jnp.inf).at[:, 0].set(ep_d)
+    expanded = jnp.ones((b, cfg.l), bool).at[:, 0].set(False)
+    inserted = jnp.zeros((b, n + 1), bool).at[rows, eps].set(True)
+
+    def cond(state):
+        _, _, expanded, _, it = state
+        return jnp.logical_and(it < cfg.max_iters, jnp.any(~expanded))
+
+    def body(state):
+        beam_ids, beam_d, expanded, inserted, it = state
+        frontier = jnp.where(expanded, jnp.inf, beam_d)
+        slot = jnp.argmin(frontier, axis=1)                       # (B,)
+        has_work = jnp.isfinite(frontier[rows, slot])
+        u = jnp.where(has_work, beam_ids[rows, slot], 0)
+        expanded = expanded.at[rows, slot].set(True)
+
+        nbrs = g.neighbors[u][:, :k]                              # Eq. 4 prefix slice
+        fresh = (nbrs >= 0) & ~inserted[rows[:, None], jnp.maximum(nbrs, 0)]
+        fresh &= has_work[:, None]
+        nd = jax.vmap(lambda q, vs: D.point_to_points(q, vs, cfg.metric))(
+            queries, x[jnp.maximum(nbrs, 0)]
+        )
+        nd = jnp.where(fresh, nd, jnp.inf)
+        ins_idx = jnp.where(fresh, nbrs, n)                       # n = scratch slot
+        inserted = inserted.at[rows[:, None], ins_idx].set(True)
+
+        all_d = jnp.concatenate([beam_d, nd], axis=1)
+        all_ids = jnp.concatenate([beam_ids, jnp.where(fresh, nbrs, -1)], axis=1)
+        all_exp = jnp.concatenate([expanded, ~fresh], axis=1)
+        neg_d, order = jax.lax.top_k(-all_d, cfg.l)               # L smallest
+        beam_d = -neg_d
+        beam_ids = jnp.take_along_axis(all_ids, order, axis=1)
+        expanded = jnp.take_along_axis(all_exp, order, axis=1)
+        return beam_ids, beam_d, expanded, inserted, it + 1
+
+    state = (beam_ids, beam_d, expanded, inserted, jnp.int32(0))
+    beam_ids, beam_d, _, _, iters = jax.lax.while_loop(cond, body, state)
+    return beam_ids[:, : cfg.topk], beam_d[:, : cfg.topk]
+
+
+def default_entry_point(x: jnp.ndarray, metric: str = "l2") -> jnp.ndarray:
+    """NSG-style navigating node: the vertex nearest the dataset centroid."""
+    c = jnp.mean(x, axis=0)
+    return jnp.argmin(D.point_to_points(c, x, metric)).astype(jnp.int32)

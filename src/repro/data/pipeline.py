@@ -1,0 +1,44 @@
+"""Host-side data pipeline: deterministic seeded batch streams + device
+prefetch double-buffering.
+
+Determinism contract (fault tolerance depends on it): batch content is a pure
+function of (dataset seed, global step) — any host can regenerate any batch,
+so restart-from-checkpoint replays the exact stream with no data loss/skew.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Callable, Iterator
+
+import jax
+
+
+def seeded_stream(batch_fn: Callable[[jax.Array], dict], seed: int,
+                  start_step: int = 0) -> Iterator[dict]:
+    """batch_fn(key) -> batch; key derived from (seed, step)."""
+    step = start_step
+    root = jax.random.PRNGKey(seed)
+    while True:
+        yield batch_fn(jax.random.fold_in(root, step))
+        step += 1
+
+
+def prefetch(it: Iterator[dict], size: int = 2, sharding=None) -> Iterator[dict]:
+    """Async device prefetch: keeps ``size`` batches in flight so host batch
+    generation overlaps device compute (the single-host stand-in for a real
+    multi-host input service)."""
+    buf = collections.deque()
+
+    def put(batch):
+        if sharding is not None:
+            batch = jax.tree.map(lambda x: jax.device_put(x, sharding), batch)
+        else:
+            batch = jax.tree.map(jax.device_put, batch)
+        buf.append(batch)
+
+    for batch in it:
+        put(batch)
+        if len(buf) >= size:
+            yield buf.popleft()
+    while buf:
+        yield buf.popleft()

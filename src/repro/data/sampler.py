@@ -1,0 +1,79 @@
+"""Fixed-fanout neighbor sampler (GraphSAGE-style) for minibatch GNN training.
+
+The real sampler the ``minibatch_lg`` cell requires: given a padded-CSR graph
+(row_ptr/col_idx), draw `fanout` uniform neighbors per frontier node per hop,
+fully vectorized in JAX (static output shapes: seeds*(1 + f1 + f1*f2) nodes).
+Duplicates across the frontier are allowed (standard GraphSAGE semantics) —
+the model consumes the subgraph through edge lists, so repeated nodes are
+just repeated messages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CSRGraph(NamedTuple):
+    row_ptr: jnp.ndarray   # (N+1,)
+    col_idx: jnp.ndarray   # (nnz,)
+
+
+class SampledSubgraph(NamedTuple):
+    """Static-shape 2-hop subgraph in *local* node numbering.
+
+    nodes: (n_sub,) global ids (padded with -1); edge_src/edge_dst index into
+    ``nodes``; seeds occupy nodes[:n_seeds]."""
+    nodes: jnp.ndarray
+    edge_src: jnp.ndarray
+    edge_dst: jnp.ndarray
+    edge_mask: jnp.ndarray
+
+
+def uniform_neighbors(key: jax.Array, g: CSRGraph, frontier: jnp.ndarray,
+                      fanout: int) -> jnp.ndarray:
+    """(F,) frontier -> (F, fanout) sampled neighbor global ids (-1 pad)."""
+    deg = g.row_ptr[frontier + 1] - g.row_ptr[frontier]
+    u = jax.random.uniform(key, (frontier.shape[0], fanout))
+    offs = (u * jnp.maximum(deg, 1)[:, None]).astype(jnp.int32)
+    idx = g.row_ptr[frontier][:, None] + offs
+    nbrs = g.col_idx[jnp.minimum(idx, g.col_idx.shape[0] - 1)]
+    ok = (deg[:, None] > 0) & (frontier[:, None] >= 0)
+    return jnp.where(ok, nbrs, -1)
+
+
+def sample_two_hop(key: jax.Array, g: CSRGraph, seeds: jnp.ndarray,
+                   fanout1: int, fanout2: int) -> SampledSubgraph:
+    """Seeds (S,) -> subgraph with S*(1+f1+f1*f2) node slots and
+    S*f1 + S*f1*f2 edge slots (edges point child -> parent, GraphSAGE
+    aggregation direction)."""
+    k1, k2 = jax.random.split(key)
+    s = seeds.shape[0]
+    h1 = uniform_neighbors(k1, g, seeds, fanout1)                   # (S, f1)
+    h1_flat = h1.reshape(-1)
+    h2 = uniform_neighbors(k2, g, jnp.maximum(h1_flat, 0), fanout2) # (S*f1, f2)
+    h2 = jnp.where(h1_flat[:, None] >= 0, h2, -1)
+    nodes = jnp.concatenate([seeds, h1_flat, h2.reshape(-1)])
+
+    # local indices: seeds 0..S-1; hop1 S..S+S*f1-1; hop2 after
+    hop1_local = s + jnp.arange(s * fanout1)
+    hop2_local = s + s * fanout1 + jnp.arange(s * fanout1 * fanout2)
+    e1_src = hop1_local
+    e1_dst = jnp.repeat(jnp.arange(s), fanout1)
+    e2_src = hop2_local
+    e2_dst = jnp.repeat(hop1_local, fanout2)
+    edge_src = jnp.concatenate([e1_src, e2_src]).astype(jnp.int32)
+    edge_dst = jnp.concatenate([e1_dst, e2_dst]).astype(jnp.int32)
+    edge_mask = jnp.concatenate([
+        (h1_flat >= 0), (h2.reshape(-1) >= 0)]).astype(jnp.float32)
+    return SampledSubgraph(nodes, edge_src, edge_dst, edge_mask)
+
+
+def random_csr(key: jax.Array, n_nodes: int, avg_degree: int) -> CSRGraph:
+    """Synthetic CSR graph with uniform degree (test/bench substrate)."""
+    deg = jnp.full((n_nodes,), avg_degree, jnp.int32)
+    row_ptr = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(deg)])
+    col = jax.random.randint(key, (n_nodes * avg_degree,), 0, n_nodes, jnp.int32)
+    return CSRGraph(row_ptr, col)

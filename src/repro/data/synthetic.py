@@ -1,0 +1,89 @@
+"""Synthetic datasets.
+
+SIFT/GIST/Deep are not redistributable offline; we generate corpora that match
+their dimensionalities and the clustered structure that makes graph-ANN
+interesting (pure-uniform data makes every method look the same). Token
+streams / click streams / molecular batches for the model zoo live here too.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class VectorDatasetSpec:
+    """Mimics the paper's Table 1 rows at configurable scale."""
+
+    name: str
+    n: int
+    d: int
+    n_queries: int
+    # std ~ 1.0 overlaps the mixture components the way real descriptor
+    # datasets (SIFT/Deep) overlap; tiny std produces disconnected islands
+    # that only connectivity-preserving builders (RNN-Descent) survive —
+    # tests/test_connectivity.py exercises that regime explicitly.
+    n_clusters: int = 64
+    cluster_std: float = 1.0
+
+    @staticmethod
+    def sift_like(n: int = 20_000, n_queries: int = 500) -> "VectorDatasetSpec":
+        return VectorDatasetSpec("sift-like", n, 128, n_queries)
+
+    @staticmethod
+    def gist_like(n: int = 5_000, n_queries: int = 200) -> "VectorDatasetSpec":
+        return VectorDatasetSpec("gist-like", n, 960, n_queries)
+
+    @staticmethod
+    def deep_like(n: int = 20_000, n_queries: int = 500) -> "VectorDatasetSpec":
+        return VectorDatasetSpec("deep-like", n, 96, n_queries)
+
+
+def clustered_vectors(key: jax.Array, spec: VectorDatasetSpec) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Gaussian-mixture corpus + held-out queries drawn from the same mixture."""
+    kc, kx, ka, kq, kb = jax.random.split(key, 5)
+    centers = jax.random.normal(kc, (spec.n_clusters, spec.d))
+    assign = jax.random.randint(ka, (spec.n,), 0, spec.n_clusters)
+    x = centers[assign] + spec.cluster_std * jax.random.normal(kx, (spec.n, spec.d))
+    q_assign = jax.random.randint(kb, (spec.n_queries,), 0, spec.n_clusters)
+    q = centers[q_assign] + spec.cluster_std * jax.random.normal(kq, (spec.n_queries, spec.d))
+    return x.astype(jnp.float32), q.astype(jnp.float32)
+
+
+def token_batch(key: jax.Array, batch: int, seq: int, vocab: int) -> dict:
+    """Synthetic LM batch: Zipf-ish token stream + next-token labels."""
+    u = jax.random.uniform(key, (batch, seq + 1), minval=1e-6, maxval=1.0)
+    toks = jnp.clip((vocab * (u ** 3.0)).astype(jnp.int32), 0, vocab - 1)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def recsys_batch(
+    key: jax.Array, batch: int, n_fields: int, vocab_sizes: tuple[int, ...],
+    n_dense: int = 13, multi_hot: int = 1,
+) -> dict:
+    """Criteo-style batch: dense feats + per-field categorical ids (+ labels)."""
+    ks = jax.random.split(key, 4)
+    dense = jax.random.normal(ks[0], (batch, n_dense))
+    ids = []
+    for f in range(n_fields):
+        kf = jax.random.fold_in(ks[1], f)
+        ids.append(jax.random.randint(kf, (batch, multi_hot), 0, vocab_sizes[f % len(vocab_sizes)]))
+    sparse = jnp.stack(ids, axis=1)  # (batch, n_fields, multi_hot)
+    labels = jax.random.bernoulli(ks[2], 0.3, (batch,)).astype(jnp.float32)
+    return {"dense": dense, "sparse_ids": sparse.astype(jnp.int32), "labels": labels}
+
+
+def random_graph_batch(
+    key: jax.Array, n_nodes: int, n_edges: int, d_feat: int, positions: bool = False,
+) -> dict:
+    """Synthetic graph: random edge index (+ 3D positions for molecular nets)."""
+    ks = jax.random.split(key, 3)
+    src = jax.random.randint(ks[0], (n_edges,), 0, n_nodes, dtype=jnp.int32)
+    dst = jax.random.randint(ks[1], (n_edges,), 0, n_nodes, dtype=jnp.int32)
+    out = {"edge_src": src, "edge_dst": dst,
+           "node_feat": jax.random.normal(ks[2], (n_nodes, d_feat))}
+    if positions:
+        out["pos"] = jax.random.normal(jax.random.fold_in(key, 7), (n_nodes, 3))
+    return out

@@ -1,0 +1,105 @@
+"""Logical-axis sharding rules (MaxText-style) for the production meshes.
+
+Models annotate activations/params with *logical* axis names; this module maps
+them to physical mesh axes. One table serves both the single-pod (data, model)
+and multi-pod (pod, data, model) meshes: 'pod' is pure data parallelism, so
+logical 'batch' maps to ('pod', 'data') when the pod axis exists.
+
+Train-step scheme (DESIGN.md §2/§5):
+  * params           -> fsdp = (data, model)   ZeRO-3 storage; gathered
+                                               just-in-time per scanned layer
+  * batch            -> data (+pod)            every arch
+  * seq (activations)-> model                  context/sequence parallelism —
+                                               uniform across archs whose head
+                                               counts (56, 24) don't divide 16
+  * vocab            -> model                  sharded embed table + logits/CE
+  * experts          -> model                  expert parallelism (all-to-all)
+  * expert d_ff      -> data                   2D-sharded expert blocks
+  * edges/candidates -> (data, model)          flat 256-way for GNN/retrieval
+  * table rows       -> (data, model)          recsys embedding row sharding
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> physical mesh axis (or tuple). None = replicated.
+RULES: dict[str, object] = {
+    "fsdp": ("data", "model"),   # ZeRO-3 param storage: flat 256/512-way
+    "expert_ff": "data",         # MoE expert d_ff (experts already on model)
+    "batch": "data",
+    "seq": "model",          # sequence-parallel activations between blocks
+    "seq_kv": None,          # gathered KV inside attention
+    "heads": None,
+    "kv_heads": None,
+    "d_head": None,
+    "d_model": None,
+    "d_ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_cap": "data",    # MoE token buffer: (E@model, C@data, d)
+    "tokens_flat": ("data", "model"),   # flattened (B@data, S@model) tokens
+    "layers": None,
+    "edges": "data",         # GNN edge arrays (width goes on 'model')
+    "nodes": None,
+    "triplets": ("data", "model"),
+    "table_rows": ("data", "model"),
+    "embed_dim": None,
+    "fields": None,
+    "candidates": ("data", "model"),
+    "cache_seq": "model",    # decode KV cache: flash-decoding split over seq
+    "cache_batch": "data",
+    # batch=1 long-context decode: nothing to data-parallelize over requests,
+    # so the 512k cache seq takes the WHOLE flat grid (flash-decoding 256-way)
+    "cache_seq_flat": ("data", "model"),
+    "mlp_hidden": None,
+    "none": None,
+}
+
+
+def physical_axes(mesh: Mesh, logical: str):
+    ax = RULES.get(logical, None)
+    if ax is None:
+        return None
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    present = tuple(a for a in axes if a in mesh.axis_names)
+    if not present:
+        return None
+    # 'pod' joins every data-parallel axis
+    if "data" in present and "pod" in mesh.axis_names:
+        present = ("pod",) + present
+    return present if len(present) > 1 else present[0]
+
+
+def pspec(mesh: Mesh, *logical: str | None) -> P:
+    return P(*(physical_axes(mesh, l) if l else None for l in logical))
+
+
+def sharding(mesh: Mesh, *logical: str | None) -> NamedSharding:
+    return NamedSharding(mesh, pspec(mesh, *logical))
+
+
+def constrain(x, mesh: Mesh | None, *logical: str | None):
+    """with_sharding_constraint if a mesh is active; identity otherwise (so
+    every model runs unchanged on a single CPU device in tests)."""
+    if mesh is None or len(mesh.devices.flatten()) == 1:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding(mesh, *logical))
+
+
+def tree_pspecs(mesh: Mesh, logical_tree):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: pspec(mesh, *axes),
+        logical_tree,
+        is_leaf=lambda v: isinstance(v, tuple) and all(isinstance(a, (str, type(None))) for a in v),
+    )
+
+
+def tree_shardings(mesh: Mesh, logical_tree):
+    """Same, but concrete NamedShardings (usable without a mesh context)."""
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, pspec(mesh, *axes)),
+        logical_tree,
+        is_leaf=lambda v: isinstance(v, tuple) and all(isinstance(a, (str, type(None))) for a in v),
+    )

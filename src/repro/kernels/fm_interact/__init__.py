@@ -1,0 +1,4 @@
+from repro.kernels.fm_interact.ops import fm_interact
+from repro.kernels.fm_interact.ref import fm_interact_ref
+
+__all__ = ["fm_interact", "fm_interact_ref"]

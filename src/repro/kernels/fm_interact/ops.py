@@ -1,0 +1,23 @@
+"""Jit'd wrapper for the FM interaction kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fm_interact.kernel import fm_interact_tiles
+from repro.kernels.fm_interact.ref import fm_interact_ref
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def fm_interact(emb: jnp.ndarray, tile_b: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """(b, F, D) field embeddings -> (b,) FM second-order logit."""
+    b = emb.shape[0]
+    tile_b = min(tile_b, b) if b > 0 else tile_b
+    pad = (-b) % tile_b
+    emb_p = jnp.pad(emb, ((0, pad), (0, 0), (0, 0)))
+    return fm_interact_tiles(emb_p, tile_b=tile_b, interpret=interpret)[:b, 0]
+
+
+__all__ = ["fm_interact", "fm_interact_ref"]

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the FM interaction kernel."""
+import jax.numpy as jnp
+
+
+def fm_interact_ref(emb: jnp.ndarray) -> jnp.ndarray:
+    e = emb.astype(jnp.float32)
+    s = jnp.sum(e, axis=1)
+    ss = jnp.sum(e * e, axis=1)
+    return 0.5 * jnp.sum(s * s - ss, axis=-1)

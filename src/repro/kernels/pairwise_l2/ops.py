@@ -1,0 +1,31 @@
+"""Jit'd public wrapper: pads to tile multiples, dispatches kernel vs ref.
+
+``interpret=True`` everywhere in this container (CPU); on a real TPU the same
+call sites flip ``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pairwise_l2.kernel import pairwise_l2_tiles
+from repro.kernels.pairwise_l2.ref import pairwise_l2_ref
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "interpret"))
+def pairwise_l2(
+    a: jnp.ndarray, b: jnp.ndarray,
+    tile_m: int = 256, tile_n: int = 256, interpret: bool = True,
+) -> jnp.ndarray:
+    na, nb = a.shape[0], b.shape[0]
+    pad_m = (-na) % tile_m
+    pad_n = (-nb) % tile_n
+    a_p = jnp.pad(a, ((0, pad_m), (0, 0)))
+    b_p = jnp.pad(b, ((0, pad_n), (0, 0)))
+    out = pairwise_l2_tiles(a_p, b_p, tile_m=tile_m, tile_n=tile_n, interpret=interpret)
+    return out[:na, :nb]
+
+
+__all__ = ["pairwise_l2", "pairwise_l2_ref"]

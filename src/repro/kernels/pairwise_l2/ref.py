@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the pairwise_l2 kernel."""
+import jax.numpy as jnp
+
+
+def pairwise_l2_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    an = jnp.sum(a * a, axis=-1)[:, None]
+    bn = jnp.sum(b * b, axis=-1)[None, :]
+    return jnp.maximum(an + bn - 2.0 * (a @ b.T), 0.0)

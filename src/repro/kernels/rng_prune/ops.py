@@ -1,0 +1,40 @@
+"""Jit'd wrapper: gather + pad + kernel dispatch for the fused RNG prune."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rng_prune.kernel import rng_prune_tiles
+from repro.kernels.rng_prune.ref import rng_prune_ref
+
+
+@functools.partial(jax.jit, static_argnames=("tile_c", "interpret"))
+def rng_prune(
+    x: jnp.ndarray,
+    ids: jnp.ndarray,
+    dists: jnp.ndarray,
+    flags: jnp.ndarray | None = None,
+    tile_c: int = 8,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (keep bool, redirect_w int32, redirect_d f32), shapes (n, M).
+
+    ``flags=None`` means plain Algorithm 3 (everything "new" -> no exemption).
+    """
+    n, m = ids.shape
+    if flags is None:
+        flags = jnp.ones((n, m), jnp.uint8)
+    pad = (-n) % tile_c
+    ids_p = jnp.pad(ids, ((0, pad), (0, 0)), constant_values=-1)
+    dists_p = jnp.pad(dists, ((0, pad), (0, 0)), constant_values=jnp.inf)
+    flags_p = jnp.pad(flags, ((0, pad), (0, 0)))
+    vecs = x[jnp.maximum(ids_p, 0)]
+    keep, red_w, red_d = rng_prune_tiles(
+        ids_p, dists_p, flags_p, vecs, tile_c=tile_c, interpret=interpret
+    )
+    return keep[:n].astype(bool), red_w[:n], red_d[:n]
+
+
+__all__ = ["rng_prune", "rng_prune_ref"]

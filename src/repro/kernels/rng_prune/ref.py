@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused RNG-prune kernel (reuses core.rng.rng_scan,
+which tests/test_rng_scan.py pins against a literal Algorithm-4 oracle)."""
+import jax.numpy as jnp
+
+from repro.core import distances as D
+from repro.core.rng import rng_scan
+
+
+def rng_prune_ref(ids, dists, flags, vecs):
+    pair = D.batched_gram(vecs.astype(jnp.float32))
+    old = flags == 0
+    skip = old[:, :, None] & old[:, None, :]
+    res = rng_scan(ids, dists, pair, skip_pair=skip)
+    return res.keep.astype(jnp.uint8), res.redirect_w, res.redirect_d

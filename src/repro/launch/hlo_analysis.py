@@ -1,0 +1,412 @@
+"""HLO-text analysis: per-device collective bytes for the roofline.
+
+cost_analysis() has no collective numbers, so we parse the optimized HLO:
+  1. index every instruction definition (name -> shape) per computation;
+  2. find collective ops (all-gather / all-reduce / reduce-scatter /
+     all-to-all / collective-permute) and their participant-group size;
+  3. scale instructions inside while-loop bodies (scan-over-layers!) by the
+     loop trip count, parsed from the loop condition's comparison constant;
+  4. convert result/operand sizes to wire bytes with ring-algorithm factors.
+
+Wire-byte model (per device, ring algorithms, group size n):
+  all-reduce      2 * size * (n-1)/n
+  all-gather      out_size * (n-1)/n
+  reduce-scatter  in_size * (n-1)/n
+  all-to-all      size * (n-1)/n
+  collective-permute  size
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+(?:\([^)]*\))?.*\{\s*$")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    """'f32[16,128]' or '(f32[2], bf16[4,4])' -> total bytes."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveRecord:
+    op: str
+    computation: str
+    bytes_wire: int
+    multiplier: int
+    group_size: int
+
+    @property
+    def total_bytes(self) -> int:
+        return self.bytes_wire * self.multiplier
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    # iota format: replica_groups=[G,S]<=[N] -> group size S
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]", line)
+    if m:
+        return int(m.group(2))
+    # explicit format: replica_groups={{0,1,2,...},{...}}
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return n_devices
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> list[CollectiveRecord]:
+    # ---- split into computations
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and ("{" in line):
+            cur = mc.group(1)
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+
+    # ---- instruction shapes per name (for operand lookup)
+    shapes: dict[str, str] = {}
+    for comp, lines in comps.items():
+        for line in lines:
+            md = _DEF_RE.match(line)
+            if md:
+                shapes[md.group(1)] = md.group(2)
+
+    # ---- while loops: body/condition computations + trip counts
+    body_trip: dict[str, int] = {}
+    cond_of_body: dict[str, str] = {}
+    for comp, lines in comps.items():
+        for line in lines:
+            if re.search(r"\bwhile\(", line):
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                mc = re.search(r"condition=%?([\w.\-]+)", line)
+                if mb and mc:
+                    cond_of_body[mb.group(1)] = mc.group(1)
+
+    def trip_count(cond_name: str) -> int:
+        best = None
+        for line in comps.get(cond_name, []):
+            if "compare(" in line and "direction=LT" in line:
+                for mc in re.finditer(r"constant\((\d+)\)", line):
+                    best = int(mc.group(1))
+        if best is None:
+            # constants may be separate instructions in the condition
+            for line in comps.get(cond_name, []):
+                m = re.search(r"=\s*\S+\s+constant\((\d+)\)", line)
+                if m:
+                    best = int(m.group(1))
+        return best if best and best > 0 else 1
+
+    for body, cond in cond_of_body.items():
+        body_trip[body] = trip_count(cond)
+
+    # ---- computation multipliers via the call graph
+    # edges: computation -> (callee, factor)
+    edges: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    for comp, lines in comps.items():
+        for line in lines:
+            for m in re.finditer(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)", line):
+                callee = m.group(1)
+                factor = body_trip.get(callee, 1) if "body=" in m.group(0) else 1
+                edges[comp].append((callee, factor))
+
+    mult: dict[str, int] = defaultdict(int)
+    entry = next((c for c in comps if "entry" in c.lower() or c == "main"), None)
+    if entry is None:
+        # heuristically: the computation nobody calls
+        called = {c for outs in edges.values() for c, _ in outs}
+        roots = [c for c in comps if c not in called]
+        entry = roots[0] if roots else next(iter(comps))
+    stack = [(entry, 1)]
+    seen_pairs = set()
+    while stack:
+        comp, m = stack.pop()
+        if m <= mult[comp]:
+            continue
+        mult[comp] = m
+        for callee, factor in edges.get(comp, []):
+            if (comp, callee, m) not in seen_pairs:
+                seen_pairs.add((comp, callee, m))
+                stack.append((callee, m * factor))
+
+    # ---- collect collective records
+    records: list[CollectiveRecord] = []
+    for comp, lines in comps.items():
+        cm = max(mult.get(comp, 0), 1) if mult.get(comp, 0) else 1
+        for line in lines:
+            md = _DEF_RE.match(line)
+            if not md:
+                continue
+            op = md.group(3)
+            base = None
+            for c in COLLECTIVES:
+                if op == c or op.startswith(c + "-"):
+                    base = c
+                    break
+            if base is None or "-start" in op and base is None:
+                continue
+            if op.endswith("-done"):
+                continue  # counted at -start
+            out_bytes = shape_bytes(md.group(2))
+            n = _group_size(line, n_devices)
+            frac = (n - 1) / n if n > 1 else 0.0
+            if base == "all-reduce":
+                wire = int(2 * out_bytes * frac)
+            elif base == "all-gather":
+                wire = int(out_bytes * frac)
+            elif base == "reduce-scatter":
+                wire = int(out_bytes * n * frac)   # input = out * n
+            elif base == "all-to-all":
+                wire = int(out_bytes * frac)
+            else:  # collective-permute
+                wire = out_bytes
+            records.append(CollectiveRecord(base, comp, wire, mult.get(comp, 1) or 1, n))
+    return records
+
+
+# Ops counted as HBM kernels for the traffic model. CPU-backend HLO leaves
+# many elementwise/broadcast/convert ops unfused that the TPU backend WOULD
+# fuse into neighbors — counting only these kinds approximates the TPU
+# executable's kernel boundaries.
+_TRAFFIC_OPS = {
+    "fusion", "dot", "convolution", "copy", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "reduce", "reduce-window",
+    "sort", "transpose", "concatenate", "pad", "select-and-scatter",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+}
+
+
+def _parse_module(hlo_text: str):
+    """Shared parse: computations, shape table, loop multipliers."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and ("{" in line):
+            cur = mc.group(1)
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+
+    shapes: dict[str, str] = {}
+    for lines in comps.values():
+        for line in lines:
+            md = _DEF_RE.match(line)
+            if md:
+                shapes[md.group(1)] = md.group(2)
+
+    body_trip: dict[str, int] = {}
+    cond_of_body: dict[str, str] = {}
+    for lines in comps.values():
+        for line in lines:
+            if re.search(r"\bwhile\(", line):
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                mc2 = re.search(r"condition=%?([\w.\-]+)", line)
+                if mb and mc2:
+                    cond_of_body[mb.group(1)] = mc2.group(1)
+
+    def trip_count(cond_name: str) -> int:
+        best = None
+        for line in comps.get(cond_name, []):
+            for mcst in re.finditer(r"constant\((\d+)\)", line):
+                best = int(mcst.group(1))
+        return best if best and best > 0 else 1
+
+    for body, cond in cond_of_body.items():
+        body_trip[body] = trip_count(cond)
+
+    edges: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    for comp, lines in comps.items():
+        for line in lines:
+            for m in re.finditer(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)", line):
+                callee = m.group(1)
+                factor = body_trip.get(callee, 1) if m.group(0).startswith("body=") else 1
+                edges[comp].append((callee, factor))
+
+    mult: dict[str, int] = defaultdict(int)
+    called = {c for outs in edges.values() for c, _ in outs}
+    roots = [c for c in comps if c not in called]
+    stack = [(r, 1) for r in (roots or list(comps)[:1])]
+    while stack:
+        comp, m = stack.pop()
+        if m <= mult[comp]:
+            continue
+        mult[comp] = m
+        for callee, factor in edges.get(comp, []):
+            stack.append((callee, m * factor))
+    return comps, shapes, mult
+
+
+def _dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def module_costs(hlo_text: str, n_devices: int) -> dict:
+    """Loop-scaled per-device dot-FLOPs + HBM-traffic estimate.
+
+    XLA's HloCostAnalysis visits each while body ONCE — scan-over-layers
+    modules under-report by ~n_layers. We re-derive:
+      * dot_flops: 2 * prod(result dims) * prod(lhs contracting dims), scaled
+        by the enclosing-loop trip-count product;
+      * traffic_bytes: sum over top-level instructions (each one kernel:
+        operands read + result written), same scaling — the TPU HBM-traffic
+        model where every non-fused HLO op round-trips HBM.
+    """
+    import math
+
+    comps, shapes, mult = _parse_module(hlo_text)
+
+    # fusion / reduce bodies are accounted at their call sites — never
+    # iterate them directly (double count)
+    called_inline: set[str] = set()
+    for lines in comps.values():
+        for line in lines:
+            for m2 in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", line):
+                called_inline.add(m2.group(1))
+
+    def root_line(comp: str) -> str | None:
+        for line in comps.get(comp, []):
+            if line.strip().startswith("ROOT"):
+                return line
+        return None
+
+    def operand_names(line: str, op: str) -> list[str]:
+        ma = re.search(rf"{re.escape(op)}\(([^)]*)\)", line)
+        if not ma:
+            return []
+        return re.findall(r"%([\w.\-]+)", ma.group(1))
+
+    dot_flops = 0
+    traffic = 0
+    traffic_ideal = 0   # unique-tensor bound: each distinct tensor once/iter
+    traffic_tpu = 0     # matmul-centric: dots/slices/collectives/reduces only,
+                        # elementwise chains assumed fused (TPU backend model)
+    for comp, lines in comps.items():
+        if comp in called_inline:
+            continue
+        m = max(mult.get(comp, 1), 1)
+        touched: dict[str, int] = {}
+        for line in lines:
+            md = _DEF_RE.match(line)
+            if not md:
+                continue
+            name, out_type, op = md.groups()
+            if op == "dot":
+                out_dims = _dims(out_type)
+                mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                k = 1
+                ops_ = operand_names(line, "dot")
+                if ops_ and mcd and mcd.group(1):
+                    lhs_dims = _dims(shapes.get(ops_[0], ""))
+                    for ci in mcd.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(lhs_dims):
+                            k *= lhs_dims[ci]
+                dot_flops += 2 * math.prod(out_dims or [0]) * k * m
+            if op not in _TRAFFIC_OPS:
+                continue
+            out_b = shape_bytes(out_type)
+            t = None
+            if op == "dynamic-update-slice":
+                ops_ = operand_names(line, op)
+                upd = shape_bytes(shapes.get(ops_[1], "")) if len(ops_) > 1 else out_b
+                t = 2 * upd                      # in-place: read+write the slice
+            elif op == "dynamic-slice":
+                t = 2 * out_b
+            elif op == "fusion":
+                mc = re.search(r"calls=%?([\w.\-]+)", line)
+                root = root_line(mc.group(1)) if mc else None
+                opnd_b = sum(shape_bytes(shapes.get(r, ""))
+                             for r in operand_names(line, op))
+                if root and "dynamic-update-slice(" in root:
+                    # aliased in-place update: only slice-sized traffic plus
+                    # the non-aliased (smaller-than-output) operands
+                    small = sum(
+                        b for b in (shape_bytes(shapes.get(r, ""))
+                                    for r in operand_names(line, op))
+                        if b < out_b)
+                    rops = re.findall(r"%([\w.\-]+)", root.split("(", 1)[1])
+                    upd = 0
+                    if len(rops) > 1:
+                        for ln in comps.get(mc.group(1), []):
+                            md2 = _DEF_RE.match(ln)
+                            if md2 and md2.group(1) == rops[1]:
+                                upd = shape_bytes(md2.group(2))
+                    t = small + 2 * (upd or out_b // 8)
+                else:
+                    t = opnd_b + out_b
+            if t is None:
+                opnd_b = sum(shape_bytes(shapes.get(r, ""))
+                             for r in operand_names(line, op))
+                t = opnd_b + out_b
+            traffic += t * m
+            if op in ("dot", "convolution", "reduce", "reduce-window", "sort",
+                      "gather", "scatter", "all-gather", "all-reduce",
+                      "reduce-scatter", "all-to-all"):
+                opnd_b = sum(shape_bytes(shapes.get(r, ""))
+                             for r in operand_names(line, op))
+                traffic_tpu += (opnd_b + out_b) * m
+            elif op in ("dynamic-slice", "dynamic-update-slice"):
+                traffic_tpu += t * m
+            # ideal-fusion accounting: mark tensors touched this computation
+            if op == "dynamic-update-slice" or (
+                    op == "fusion" and t is not None and t < out_b):
+                touched[name] = min(t, out_b)
+            else:
+                touched[name] = out_b
+            for r in operand_names(line, op):
+                touched.setdefault(r, shape_bytes(shapes.get(r, "")))
+        traffic_ideal += sum(touched.values()) * m
+    return {"dot_flops_per_device": int(dot_flops),
+            "traffic_bytes_per_device": int(traffic),
+            "traffic_ideal_bytes_per_device": int(traffic_ideal),
+            "traffic_tpu_bytes_per_device": int(traffic_tpu)}
+
+
+def collective_summary(hlo_text: str, n_devices: int) -> dict:
+    recs = parse_collectives(hlo_text, n_devices)
+    by_op: dict[str, int] = defaultdict(int)
+    count: dict[str, int] = defaultdict(int)
+    for r in recs:
+        by_op[r.op] += r.total_bytes
+        count[r.op] += r.multiplier
+    return {
+        "total_bytes_per_device": int(sum(by_op.values())),
+        "bytes_by_op": dict(by_op),
+        "count_by_op": dict(count),
+        "n_instructions": len(recs),
+    }

@@ -1,0 +1,23 @@
+"""Production mesh factory.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state. The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+(in launch/dryrun.py, before any jax import) so these shapes are buildable on
+the CPU container; on real hardware the same call maps onto the v5e pod
+slices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Elastic variant: arbitrary (pods, data, model) factorization for
+    restore-onto-different-topology tests."""
+    return jax.make_mesh(shape, axes)

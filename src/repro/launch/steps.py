@@ -1,0 +1,224 @@
+"""Bind (arch, shape) -> the jittable step the cell lowers.
+
+One place defines, for every cell of the grid:
+  * ``abstract_state()`` — eval_shape'd params/opt-state (no allocation),
+  * ``input_specs()``    — ShapeDtypeStruct stand-ins for every input,
+  * ``step_fn``          — the function the dry-run lowers and the trainers run,
+  * shardings for both (via the logical-axes trees).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cb
+from repro.configs.base import Arch, ShapeSpec
+from repro.distributed import sharding as sh
+from repro.models import dimenet as dm
+from repro.models import recsys as rs
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.train import step as tstep
+
+
+@dataclasses.dataclass
+class BoundStep:
+    arch_id: str
+    shape: ShapeSpec
+    cfg: Any
+    step_fn: Callable            # (state_or_params, batch) -> ...
+    init_fn: Callable            # (key) -> state_or_params
+    input_specs: dict
+    state_axes: Any              # logical-axes tree for the state
+    batch_axes: Any              # logical-axes tree for the batch
+    kind: str
+
+    def abstract_state(self):
+        return jax.eval_shape(lambda: self.init_fn(jax.random.PRNGKey(0)))
+
+
+OPT_CFG = adamw.AdamWConfig(lr=3e-4, warmup_steps=100, total_steps=10_000)
+
+
+def _train_state_axes(param_axes, master: bool = False):
+    """TrainState(params, OptState(step, m, v, master?), residual=None) axes."""
+    return tstep.TrainState(
+        params=param_axes,
+        opt=adamw.OptState(step=(), m=param_axes, v=param_axes,
+                           master=param_axes if master else None),
+        residual=None,
+    )
+
+
+def _lm_batch_axes(shape: ShapeSpec, cfg) -> Any:
+    if shape.kind == "train":
+        return {"tokens": ("batch", None), "labels": ("batch", None)}
+    if shape.kind == "prefill":
+        return {"tokens": ("batch", None)}
+    if shape.dims["batch"] >= 16:
+        cache = dict(tf.cache_axes())
+        return {"tokens": ("cache_batch",), "cache": cache}
+    # batch=1 long-context decode: shard the cache seq over the whole grid
+    ax = ("layers", None, "cache_seq_flat", "kv_heads", "d_head")
+    return {"tokens": (None,),
+            "cache": {"k": ax, "v": ax, "pos": (None,)}}
+
+
+def bind_with_cfg(arch: Arch, shape_name: str, cfg, mesh=None) -> BoundStep:
+    """bind() with an explicit (overridden) model config — hillclimb harness."""
+    return bind(arch, shape_name, reduced=False, mesh=mesh, _cfg=cfg)
+
+
+def bind(arch: Arch, shape_name: str, reduced: bool = False, mesh=None,
+         _cfg=None) -> BoundStep:
+    shape = arch.shape(shape_name)
+    cfg = _cfg if _cfg is not None else arch.make_config(shape_name, reduced)
+
+    if arch.family == "lm":
+        specs = cb.lm_input_specs(cfg, shape, reduced)
+        param_axes = tf.param_axes(cfg)
+        if shape.kind == "train":
+            loss = functools.partial(_lm_loss, cfg=cfg, mesh=mesh)
+            train = tstep.make_train_step(loss, OPT_CFG)
+
+            def init_fn(key):
+                return tstep.init_state(tf.init(key, cfg)[0],
+                                        compute_dtype=cfg.compute_dtype)
+
+            return BoundStep(arch.arch_id, shape, cfg, train, init_fn, specs,
+                             _train_state_axes(param_axes, master=True),
+                             _lm_batch_axes(shape, cfg), "train")
+        if shape.kind == "prefill":
+            def prefill_fn(params, batch):
+                b, s = batch["tokens"].shape
+                cache = tf.init_cache(cfg, b, s)
+                return tf.prefill(params, batch["tokens"], cache, cfg, mesh)
+
+            return BoundStep(arch.arch_id, shape, cfg, prefill_fn,
+                             lambda key: tf.init(key, cfg)[0], specs,
+                             param_axes, _lm_batch_axes(shape, cfg), "prefill")
+
+        def decode_fn(params, batch):
+            return tf.decode_step(params, batch["tokens"], batch["cache"], cfg, mesh)
+
+        return BoundStep(arch.arch_id, shape, cfg, decode_fn,
+                         lambda key: tf.init(key, cfg)[0], specs,
+                         param_axes, _lm_batch_axes(shape, cfg), "decode")
+
+    if arch.family == "gnn":
+        specs = cb.gnn_input_specs(cfg, shape, reduced)
+        param_axes = dm.param_axes(cfg)
+        loss = functools.partial(_gnn_loss, cfg=cfg, mesh=mesh)
+        train = tstep.make_train_step(loss, OPT_CFG)
+
+        def init_fn(key):
+            return tstep.init_state(dm.init(key, cfg)[0])
+
+        batch_axes = {k: _gnn_axes(k, ndim=len(specs[k].shape)) for k in specs}
+        return BoundStep(arch.arch_id, shape, cfg, train, init_fn, specs,
+                         _train_state_axes(param_axes), batch_axes, "train")
+
+    if arch.family == "recsys":
+        specs = cb.recsys_input_specs(cfg, shape, reduced)
+        if shape.kind == "retrieval":
+            def retrieve_fn(params, batch):
+                return rs.score_candidates(batch["query_emb"], batch["cand_embs"],
+                                           k=100, mesh=mesh)
+
+            return BoundStep(arch.arch_id, shape, cfg, retrieve_fn,
+                             lambda key: {}, specs, {},
+                             {"query_emb": (None,), "cand_embs": ("candidates", None)},
+                             "retrieval")
+        param_axes = rs.param_axes(cfg)
+        batch_axes = {
+            "sparse_ids": ("batch", None, None),
+            "dense": ("batch", None),
+        }
+        if shape.kind == "train":
+            batch_axes["labels"] = ("batch",)
+            loss = functools.partial(_recsys_loss, cfg=cfg, mesh=mesh)
+            train = tstep.make_train_step(loss, OPT_CFG)
+
+            def init_fn(key):
+                return tstep.init_state(rs.init(key, cfg)[0])
+
+            return BoundStep(arch.arch_id, shape, cfg, train, init_fn, specs,
+                             _train_state_axes(param_axes), batch_axes, "train")
+
+        def serve_fn(params, batch):
+            return rs.serve(params, batch, cfg, mesh)
+
+        return BoundStep(arch.arch_id, shape, cfg, serve_fn,
+                         lambda key: rs.init(key, cfg)[0], specs,
+                         param_axes, batch_axes, "serve")
+
+    if arch.family == "ann":
+        from repro.core import rnn_descent as rd
+        from repro.core import search as srch
+        from repro.configs import rnnd_ann
+
+        d = dict(shape.dims)
+        n = d["n"] if not reduced else 4096
+        dim = d["d"] if not reduced else 32
+        if shape.kind == "ann_build":
+            specs = {"x": jax.ShapeDtypeStruct((n, dim), jnp.float32)}
+
+            def build_fn(_params, batch):
+                return rd.build_jit(batch["x"], cfg, jax.random.PRNGKey(0))
+
+            return BoundStep(arch.arch_id, shape, cfg, build_fn, lambda key: {},
+                             specs, {}, {"x": ("batch", None)}, "ann_build")
+        nq = (-(-d["queries"] // 512) * 512) if not reduced else 128  # grid-divisible
+        scfg = rnnd_ann.SEARCH_SMOKE if reduced else rnnd_ann.SEARCH
+        cap = (rnnd_ann.SMOKE if reduced else rnnd_ann.FULL).capacity
+        specs = {
+            "x": jax.ShapeDtypeStruct((n, dim), jnp.float32),
+            "neighbors": jax.ShapeDtypeStruct((n, cap), jnp.int32),
+            "dists": jax.ShapeDtypeStruct((n, cap), jnp.float32),
+            "queries": jax.ShapeDtypeStruct((nq, dim), jnp.float32),
+        }
+
+        def search_fn(_params, batch):
+            from repro.core.graph import Graph
+            g = Graph(batch["neighbors"], batch["dists"],
+                      jnp.zeros_like(batch["neighbors"], jnp.uint8))
+            return srch.search(batch["x"], g, batch["queries"], jnp.int32(0), scfg)
+
+        return BoundStep(arch.arch_id, shape, cfg, search_fn, lambda key: {},
+                         specs, {},
+                         {"x": (None, None), "neighbors": (None, None),
+                          "dists": (None, None), "queries": ("batch", None)},
+                         "ann_search")
+
+    raise ValueError(arch.family)
+
+
+# ------------------------------------------------------------ loss bindings
+def _lm_loss(params, batch, cfg, mesh):
+    return tf.loss_fn(params, batch, cfg, mesh)
+
+
+def _gnn_loss(params, batch, cfg, mesh):
+    return dm.loss_fn(params, batch, cfg, mesh)
+
+
+def _recsys_loss(params, batch, cfg, mesh):
+    return rs.loss_fn(params, batch, cfg, mesh)
+
+
+def _gnn_axes(key: str, ndim: int = 1):
+    if key.startswith("edge_"):
+        # chunked (C, ce): chunk axis replicated, 'data' on ce
+        return (None, "edges") if ndim == 2 else ("edges",)
+    table = {
+        "node_feat": ("nodes", None), "pos": ("nodes", None),
+        "triplet_kj": ("triplets",), "triplet_ji": ("triplets",),
+        "triplet_mask": ("triplets",),
+        "labels": (None,), "label_mask": (None,), "graph_ids": (None,),
+        "node_mask": (None,),
+    }
+    return table.get(key, (None,))

@@ -1,0 +1,66 @@
+"""Minimal NN substrate: explicit param pytrees + logical-axis metadata.
+
+Every init function returns ``(params, axes)`` where ``axes`` mirrors the
+params pytree with tuples of logical axis names (consumed by
+distributed.sharding.tree_pspecs to build in_shardings for pjit). No flax —
+params are plain nested dicts of jnp arrays; apply functions are pure.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, axes=("none", "none"), scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    return {"w": w}, {"w": axes}
+
+
+def dense(params, x, compute_dtype=jnp.bfloat16):
+    return x.astype(compute_dtype) @ params["w"].astype(compute_dtype)
+
+
+def rmsnorm_init(d: int, axes=("none",)):
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": axes}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * params["scale"]).astype(dt)
+
+
+def embedding_init(key, vocab: int, d: int, axes=("vocab", "none")):
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    return {"table": w}, {"table": axes}
+
+
+def embed(params, ids, compute_dtype=jnp.bfloat16):
+    return params["table"].astype(compute_dtype)[ids]
+
+
+def mlp_init(key, dims: tuple[int, ...], hidden_axis: str = "mlp_hidden"):
+    """Plain ReLU MLP (recsys towers). dims = (d_in, h1, ..., d_out)."""
+    params, axes = {}, {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        p, ax = dense_init(jax.random.fold_in(key, i), a, b,
+                           axes=("none", hidden_axis if i < len(dims) - 2 else "none"))
+        params[f"fc{i}"] = p
+        axes[f"fc{i}"] = ax
+        params[f"b{i}"] = jnp.zeros((b,), jnp.float32)
+        axes[f"b{i}"] = (hidden_axis if i < len(dims) - 2 else "none",)
+    return params, axes
+
+
+def mlp(params, x, n_layers: int, act=jax.nn.relu, compute_dtype=jnp.bfloat16):
+    for i in range(n_layers):
+        x = dense(params[f"fc{i}"], x, compute_dtype) + params[f"b{i}"].astype(compute_dtype)
+        if i < n_layers - 1:
+            x = act(x)
+    return x
+
+
+def count_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))

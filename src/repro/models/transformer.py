@@ -1,0 +1,644 @@
+"""Decoder-only transformer family: dense GQA (yi/granite/minitron) and MoE
+(dbrx/deepseek-moe), scan-over-layers, TPU-sharded.
+
+Parallelism (see distributed/sharding.py): params stored ZeRO-3 over the flat
+(data, model) grid and gathered per scanned layer; activations are
+(batch@data, seq@model, d_model) between blocks — context parallelism, chosen
+because assigned head counts (56, 24) do not divide the 16-wide model axis.
+Vocab is model-sharded end-to-end (embed gather, logits, chunked CE). MoE uses
+sort-based capacity dispatch with experts on the model axis (all-to-all) and
+expert d_ff on the data axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import nn
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0          # deepseek-style always-on shared experts
+    d_ff: int = 0              # per-expert hidden dim
+    capacity_factor: float = 1.25
+    impl: str = "dropping"     # "dropping" (sort+capacity) | "dense" (debug)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int                  # dense-FFN hidden (MoE archs: shared/dense path)
+    vocab: int
+    d_head: int = 128
+    moe: MoEConfig | None = None
+    ffn_type: str = "swiglu"   # "swiglu" (3 mats) | "gelu" (2 mats, gpt-bigcode)
+    rope_theta: float = 10_000.0
+    q_chunk: int = 1024        # attention query-block size (memory bound)
+    ce_chunk: int = 512        # cross-entropy seq-block size
+    remat: bool = True
+    scan_groups: int = 1       # sqrt-L nested-scan remat: carry G + L/G layer
+                               # inputs instead of L (yi-34b: 10.5 -> ~2.8 GB)
+    cast_params_once: bool = True   # bf16-cast stacked params BEFORE the scan:
+                               # FSDP all-gathers AND the grad all-reduce move
+                               # bf16, not f32 (halves both wire volumes)
+    compute_dtype: Any = jnp.bfloat16
+
+    @property
+    def n_params(self) -> int:
+        """Analytic parameter count (embed + layers + head)."""
+        d, dh = self.d_model, self.d_head
+        attn = d * self.n_heads * dh + 2 * d * self.n_kv_heads * dh + self.n_heads * dh * d
+        dense_ffn = (3 if self.ffn_type == "swiglu" else 2) * d * self.d_ff
+        per_layer = attn + 2 * d  # + norms
+        if self.moe is not None:
+            per_layer += self.moe.n_experts * 3 * d * self.moe.d_ff
+            per_layer += self.moe.n_shared * 3 * d * self.moe.d_ff
+            per_layer += d * self.moe.n_experts
+        else:
+            per_layer += dense_ffn
+        return self.n_layers * per_layer + 2 * self.vocab * d + d
+
+    @property
+    def n_active_params(self) -> int:
+        """Params touched per token (MoE: top-k + shared experts only)."""
+        if self.moe is None:
+            return self.n_params
+        d = self.d_model
+        inactive = self.n_layers * (self.moe.n_experts - self.moe.top_k) * 3 * d * self.moe.d_ff
+        return self.n_params - inactive
+
+
+# --------------------------------------------------------------------- init
+def param_table(cfg: TransformerConfig) -> dict:
+    """Static parameter spec: name -> (shape, logical axes, init scale).
+    Nested dict mirrors the params pytree; building it allocates nothing."""
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    L = cfg.n_layers
+    s_attn = 1.0 / (d ** 0.5)
+    s_ffn = 1.0 / (d ** 0.5)
+
+    def lyr(shape, axes, scale):
+        return ((L, *shape), ("layers", *axes), scale)
+
+    # MQA (kv=1): the kv projection's out-dim (128) can't split over the flat
+    # 512-way fsdp grid — shard its d_model rows instead
+    kv_axes = (None, "fsdp") if (kv * dh) % 512 == 0 else ("fsdp", None)
+    layers = {
+        "wq": lyr((d, h * dh), (None, "fsdp"), s_attn),
+        "wk": lyr((d, kv * dh), kv_axes, s_attn),
+        "wv": lyr((d, kv * dh), kv_axes, s_attn),
+        "wo": lyr((h * dh, d), (None, "fsdp"), 1.0 / (h * dh) ** 0.5),
+        "ln1": ((L, d), ("layers", None), "ones"),
+        "ln2": ((L, d), ("layers", None), "ones"),
+    }
+    if cfg.moe is None:
+        if cfg.ffn_type == "swiglu":
+            layers["w_gate"] = lyr((d, cfg.d_ff), (None, "fsdp"), s_ffn)
+        layers["w_up"] = lyr((d, cfg.d_ff), (None, "fsdp"), s_ffn)
+        layers["w_down"] = lyr((cfg.d_ff, d), ("fsdp", None), 1.0 / cfg.d_ff ** 0.5)
+    else:
+        e, f = cfg.moe.n_experts, cfg.moe.d_ff
+        layers["router"] = lyr((d, e), (None, None), s_ffn)
+        layers["we_gate"] = lyr((e, d, f), ("experts", None, "expert_ff"), s_ffn)
+        layers["we_up"] = lyr((e, d, f), ("experts", None, "expert_ff"), s_ffn)
+        layers["we_down"] = lyr((e, f, d), ("experts", "expert_ff", None), 1.0 / f ** 0.5)
+        if cfg.moe.n_shared:
+            # shared-expert width (e.g. deepseek 2816) may not divide the
+            # flat 512-way grid — shard whichever dim does
+            sf = cfg.moe.n_shared * cfg.moe.d_ff
+            sfa = (None, "fsdp") if sf % 512 == 0 else ("fsdp", None)
+            layers["ws_gate"] = lyr((d, sf), sfa, s_ffn)
+            layers["ws_up"] = lyr((d, sf), sfa, s_ffn)
+            layers["ws_down"] = lyr((sf, d), tuple(reversed(sfa)), 1.0 / sf ** 0.5)
+    return {
+        "embed": {"table": ((cfg.vocab, d), ("vocab", None), 0.02)},
+        "head": {"w": ((d, cfg.vocab), (None, "vocab"), s_attn)},
+        "layers": layers,
+        "ln_f": ((d,), (None,), "ones"),
+    }
+
+
+def param_axes(cfg: TransformerConfig) -> dict:
+    """Logical-axes pytree (no allocation)."""
+    return jax.tree.map(lambda spec: spec[1], param_table(cfg),
+                        is_leaf=lambda v: isinstance(v, tuple) and len(v) == 3
+                        and isinstance(v[0], tuple))
+
+
+def init(key: jax.Array, cfg: TransformerConfig) -> tuple[dict, dict]:
+    table = param_table(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(
+        table, is_leaf=lambda v: isinstance(v, tuple) and len(v) == 3
+        and isinstance(v[0], tuple))
+    keys = jax.random.split(key, len(leaves))
+    params_leaves = []
+    for k, (shape, _axes, scale) in zip(keys, leaves):
+        if scale == "ones":
+            params_leaves.append(jnp.ones(shape, jnp.float32))
+        else:
+            params_leaves.append(jax.random.normal(k, shape, jnp.float32) * scale)
+    return jax.tree_util.tree_unflatten(treedef, params_leaves), param_axes(cfg)
+
+
+# ---------------------------------------------------------------- attention
+def _rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def _attend(q, k, v, q_pos, kv_pos, cfg, mesh, causal=True):
+    """q: (B, Sq, H, dh); k/v: (B, Skv, KV, dh). Flash-style attention:
+    ``lax.scan`` over KV blocks with an online softmax, so the materialized
+    score block is (B, H, Sq_local, kv_block) instead of (.., Skv).
+
+    Sq stays model-sharded (context parallel) through the whole scan — the KV
+    blocks are gathered/replicated (seq_kv -> None), and scanning over a
+    replicated leading axis never breaks the Sq sharding. fp32 accumulators.
+
+    The whole routine is checkpointed when cfg.remat: backward recomputes the
+    blocks instead of storing per-block softmax residuals (the flash
+    memory/compute tradeoff — saves n_blk * score-block bytes per layer)."""
+    if cfg.remat:
+        fn = jax.checkpoint(
+            functools.partial(_attend_impl, cfg=cfg, mesh=mesh, causal=causal),
+            policy=jax.checkpoint_policies.nothing_saveable)
+        return fn(q, k, v, q_pos, kv_pos)
+    return _attend_impl(q, k, v, q_pos, kv_pos, cfg=cfg, mesh=mesh, causal=causal)
+
+
+def _attend_impl(q, k, v, q_pos, kv_pos, cfg, mesh, causal=True):
+    b, sq, h, dh = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    k = constrain(k, mesh, "batch", "seq_kv", "kv_heads", "d_head")
+    v = constrain(v, mesh, "batch", "seq_kv", "kv_heads", "d_head")
+    qg = (q * (dh ** -0.5)).reshape(b, sq, kv, group, dh)
+
+    c = min(cfg.q_chunk, skv)                 # kv-block size (reuses q_chunk knob)
+    n_blk = skv // c if skv % c == 0 else 1
+    c = skv // n_blk
+    ks = jnp.moveaxis(k.reshape(b, n_blk, c, kv, dh), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, n_blk, c, kv, dh), 1, 0)
+    ps = jnp.moveaxis(kv_pos.reshape(b, n_blk, c) if kv_pos.ndim == 2
+                      else jnp.broadcast_to(kv_pos, (b, skv)).reshape(b, n_blk, c), 1, 0)
+
+    def body(carry, blk):
+        m_prev, l_prev, o_prev = carry
+        kb, vb, pb = blk                                       # (B, c, KV, dh), (B, c)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb,
+                       preferred_element_type=jnp.float32)     # (B, KV, G, Sq, c)
+        if causal:
+            mask = q_pos[:, None, None, :, None] >= pb[:, None, None, None, :]
+            s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        o_blk = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(cfg.compute_dtype), vb)
+        o_new = o_prev * corr[..., None] + o_blk.astype(jnp.float32)
+        return (m_new, l_new, o_new), None
+
+    init = (
+        jnp.full((b, kv, group, sq), -jnp.inf, jnp.float32),
+        jnp.zeros((b, kv, group, sq), jnp.float32),
+        jnp.zeros((b, kv, group, sq, dh), jnp.float32),
+    )
+    (m, l, o), _ = jax.lax.scan(body, init, (ks, vs, ps))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(o, 3, 1).reshape(b, sq, h, dh).astype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------- MoE
+def _tok_axis(t: int, mesh) -> str | None:
+    """Widest shardable axis set for a length-t token dimension."""
+    if mesh is None:
+        return None
+    if t % mesh.devices.size == 0:
+        return "tokens_flat"
+    dp = 1
+    for name, size in zip(mesh.axis_names, mesh.devices.shape):
+        if name in ("pod", "data"):
+            dp *= size
+    return "batch" if t % dp == 0 else None
+
+
+def _moe_groups(t: int, mesh) -> int:
+    """Dispatch-group count: the flat grid size when tokens allow, else the
+    data-parallel size, else 1 (single-device smokes)."""
+    if mesh is None:
+        return 1
+    flat = mesh.devices.size
+    if t % flat == 0 and t // flat >= 16:
+        return flat
+    dp = 1
+    for name, size in zip(mesh.axis_names, mesh.devices.shape):
+        if name in ("pod", "data"):
+            dp *= size
+    if t % dp == 0 and t // dp >= 4:
+        return dp
+    return 1
+
+
+def _moe_local_dispatch(x_loc, router, wg, wu, wd, cfg, ml: int, cap: int,
+                        model_axis: str | None):
+    """Per-shard MoE body (shard_map interior, also the mesh-free path with
+    ml=1): local route -> sort -> static-slice dispatch -> [all_to_all over
+    'model'] -> expert GEMM -> [all_to_all back] -> masked-DUS combine.
+
+    x_loc: (t, d). wg/wu/wd: (e_loc, d, f) / (e_loc, f, d) gathered weights.
+    Returns (y (t, d), router probs (t, E_local_view))."""
+    m = cfg.moe
+    dt = cfg.compute_dtype
+    t, d = x_loc.shape
+    e_loc = wg.shape[0]
+    e = e_loc * ml
+    k = m.top_k
+    mg = t * k
+
+    logits = x_loc.astype(jnp.float32) @ router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (t, E)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = (top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)).astype(dt)
+
+    ge = top_e.reshape(mg)
+    gw = top_p.reshape(mg)
+    gtok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    order = jnp.argsort(ge)
+    se, stok, sw = ge[order], gtok[order], gw[order]
+    seg_start = jnp.searchsorted(se, jnp.arange(e + 1))        # (E+1,)
+    vals = x_loc[stok]                                          # (mg, d) perm
+    vals_pad = jnp.pad(vals, ((0, cap), (0, 0)))
+
+    def slice_expert(s0, s1):
+        win = jax.lax.dynamic_slice(vals_pad, (s0, 0), (cap, d))
+        idx = s0 + jnp.arange(cap)
+        return jnp.where(((idx < s1) & (idx < mg))[:, None], win, 0)
+
+    buf = jnp.stack([slice_expert(seg_start[ei], seg_start[ei + 1])
+                     for ei in range(e)])                      # (E, cap, d)
+
+    if model_axis is not None and ml > 1:
+        # the MoE all-to-all: send each expert's slots to its owner
+        buf = jax.lax.all_to_all(buf, model_axis, split_axis=0,
+                                 concat_axis=1, tiled=True)    # (e_loc, ml*cap, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg.astype(dt))) * \
+        jnp.einsum("ecd,edf->ecf", buf, wu.astype(dt))
+    y_e = jnp.einsum("ecf,efd->ecd", h, wd.astype(dt))
+    if model_axis is not None and ml > 1:
+        y_e = jax.lax.all_to_all(y_e, model_axis, split_axis=1,
+                                 concat_axis=0, tiled=True)    # (E, cap, d)
+
+    # inverse of the slicing: ascending masked DUS (spill regions provably
+    # overwritten by the next expert's window)
+    out = jnp.zeros((mg + cap, d), dt)
+    for ei in range(e):
+        out = jax.lax.dynamic_update_slice(out, y_e[ei], (seg_start[ei], 0))
+    contrib = out[:mg] * sw[:, None]
+    inv = jnp.argsort(order)
+    y = jnp.sum(contrib[inv].reshape(t, k, d), axis=1)
+    return y, probs, top_e
+
+
+def _moe_shardmapped(p, y3, cfg: TransformerConfig, mesh):
+    """shard_map MoE interior: local dispatch per (data, model) shard,
+    explicit all_to_all over 'model' for the expert exchange, expert-weight
+    d_ff gathered over 'data' (ZeRO storage). Gradients flow through
+    (collective transposes are native)."""
+    from jax.sharding import PartitionSpec as P
+
+    m = cfg.moe
+    b, s, d = y3.shape
+    dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in dp_axes:
+        dp *= sizes[a]
+    ml = sizes.get("model", 1)
+    t_loc = (b // dp) * (s // ml)
+    cap = max(int(-(-t_loc * m.top_k // m.n_experts) * m.capacity_factor), m.top_k)
+    cap = -(-cap // 8) * 8
+    dpx = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def body(xb, router, wg, wu, wd):
+        wg = jax.lax.all_gather(wg, dp_axes, axis=2, tiled=True)
+        wu = jax.lax.all_gather(wu, dp_axes, axis=2, tiled=True)
+        wd = jax.lax.all_gather(wd, dp_axes, axis=1, tiled=True)
+        bl, sl, _ = xb.shape
+        y, probs, top_e = _moe_local_dispatch(
+            xb.reshape(-1, d), router, wg, wu, wd, cfg, ml=ml, cap=cap,
+            model_axis="model")
+        return y.reshape(bl, sl, d), probs, top_e
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dpx, "model", None), P(None, None),
+                  P("model", None, dpx), P("model", None, dpx),
+                  P("model", dpx, None)),
+        out_specs=(P(dpx, "model", None),
+                   P((*dp_axes, "model"), None), P((*dp_axes, "model"), None)),
+        check_vma=False,
+    )(y3, p["router"], p["we_gate"], p["we_up"], p["we_down"])
+
+
+def _moe_ffn(p, y3, cfg: TransformerConfig, mesh):
+    """Capacity-dispatch MoE. y3: (B, S, d) -> ((B, S, d), aux loss)."""
+    m = cfg.moe
+    b, s, d = y3.shape
+    t = b * s
+    dt = cfg.compute_dtype
+    e, k = m.n_experts, m.top_k
+    x_flat = y3.reshape(t, d)
+
+    use_sm = False
+    if mesh is not None and m.impl == "dropping":
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dp = sizes.get("data", 1) * sizes.get("pod", 1)
+        ml = sizes.get("model", 1)
+        use_sm = (b % dp == 0 and s % ml == 0 and e % ml == 0
+                  and (b // dp) * (s // ml) >= 64)
+
+    if m.impl == "dense":
+        logits = x_flat.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+        h_g = jnp.einsum("td,edf->tef", x_flat, p["we_gate"].astype(dt))
+        h_u = jnp.einsum("td,edf->tef", x_flat, p["we_up"].astype(dt))
+        h = jax.nn.silu(h_g) * h_u
+        y_e = jnp.einsum("tef,efd->ted", h, p["we_down"].astype(dt))
+        w = jnp.zeros((t, e), dt)
+        w = w.at[jnp.arange(t)[:, None], top_e].set(top_p.astype(dt))
+        y = jnp.einsum("ted,te->td", y_e, w)
+    elif use_sm:
+        y, probs, top_e = _moe_shardmapped(p, y3, cfg, mesh)
+        y = y.reshape(t, d)
+        probs = probs.reshape(-1, e)
+        top_e = top_e.reshape(-1, k)
+    else:
+        # mesh-free / small-T path: vmapped local dispatch over data groups
+        g = _moe_groups(t, mesh)
+        tg = t // g
+        cap = max(int(-(-tg * k // e) * m.capacity_factor), k)
+        cap = -(-cap // 8) * 8
+        g_ax = "batch" if g > 1 else None
+        xg = constrain(x_flat.reshape(g, tg, d), mesh, g_ax, None, None)
+        fn = functools.partial(_moe_local_dispatch, cfg=cfg, ml=1, cap=cap,
+                               model_axis=None)
+        y, probs, top_e = jax.vmap(
+            lambda xr: fn(xr, p["router"], p["we_gate"], p["we_up"], p["we_down"])
+        )(xg)
+        y = constrain(y, mesh, g_ax, None, None).reshape(t, d)
+        probs = probs.reshape(-1, e)
+        top_e = top_e.reshape(-1, k)
+
+    if m.n_shared:
+        hs = jax.nn.silu(x_flat @ p["ws_gate"].astype(dt)) * (
+            x_flat @ p["ws_up"].astype(dt))
+        y = y + hs @ p["ws_down"].astype(dt)
+    # load-balance aux loss (Switch-style)
+    me = jnp.mean(probs.astype(jnp.float32), axis=0)
+    ce_frac = jnp.zeros((e,)).at[top_e.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce_frac)
+    return y.reshape(b, s, d), aux
+
+
+def _dense_ffn(p, y, cfg: TransformerConfig):
+    dt = cfg.compute_dtype
+    if cfg.ffn_type == "swiglu":
+        h = jax.nn.silu(y @ p["w_gate"].astype(dt)) * (y @ p["w_up"].astype(dt))
+    else:
+        h = jax.nn.gelu(y @ p["w_up"].astype(dt))
+    return h @ p["w_down"].astype(dt)
+
+
+# ------------------------------------------------------------------- blocks
+def _layer(p, x, positions, cfg: TransformerConfig, mesh):
+    """One pre-norm block. x: (B, S, d) with S model-sharded."""
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = cfg.compute_dtype
+
+    y = nn.rmsnorm({"scale": p["ln1"]}, x)
+    q = (y @ p["wq"].astype(dt)).reshape(b, s, h, dh)
+    k = (y @ p["wk"].astype(dt)).reshape(b, s, kv, dh)
+    v = (y @ p["wv"].astype(dt)).reshape(b, s, kv, dh)
+    q = _rope(q, positions, cfg.rope_theta)
+    k = _rope(k, positions, cfg.rope_theta)
+    o = _attend(q, k, v, positions, positions, cfg, mesh)
+    x = x + (o.reshape(b, s, h * dh) @ p["wo"].astype(dt))
+    x = constrain(x, mesh, "batch", "seq", "d_model")
+
+    y = nn.rmsnorm({"scale": p["ln2"]}, x)
+    if cfg.moe is None:
+        x = x + _dense_ffn(p, y, cfg)
+        aux = jnp.float32(0)
+    else:
+        y_moe, aux = _moe_ffn(p, y, cfg, mesh)
+        x = x + y_moe
+    x = constrain(x, mesh, "batch", "seq", "d_model")
+    return x, aux
+
+
+def _cast_layer_params(layers: dict, cfg: TransformerConfig) -> dict:
+    """One top-level bf16 cast of the big stacked mats (ndim >= 3): the cast
+    is local on the fsdp shards, so every downstream all-gather — and the
+    transposed grad all-reduce — moves bf16 instead of f32. Norm scales
+    (ndim 2) stay f32."""
+    if not cfg.cast_params_once:
+        return layers
+    return jax.tree.map(
+        lambda w: w.astype(cfg.compute_dtype) if w.ndim >= 3 else w, layers)
+
+
+def _scan_layers(body, x, layer_params, cfg: TransformerConfig):
+    """scan-over-layers with optional sqrt-L two-level remat: the outer scan
+    checkpoints G group inputs, each group's backward re-runs an inner scan of
+    L/G layers — peak residency (G + L/G) x block input instead of L x."""
+    L = cfg.n_layers
+    G = cfg.scan_groups
+    if cfg.remat and (G <= 1 or L % G != 0):
+        body_ck = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        return jax.lax.scan(body_ck, x, layer_params)
+    if G <= 1 or L % G != 0:
+        return jax.lax.scan(body, x, layer_params)
+    grouped = jax.tree.map(lambda w: w.reshape(G, L // G, *w.shape[1:]), layer_params)
+
+    def group_body(xc, gp):
+        xc, aux = jax.lax.scan(body, xc, gp)
+        return xc, aux
+
+    if cfg.remat:
+        group_body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, aux = jax.lax.scan(group_body, x, grouped)
+    return x, jax.tree.map(lambda a: a.reshape(L, *a.shape[2:]), aux)
+
+
+def forward(params, tokens, cfg: TransformerConfig, mesh=None):
+    """tokens (B, S) -> final hidden states (B, S, d) + aux loss."""
+    b, s = tokens.shape
+    x = nn.embed(params["embed"], tokens, cfg.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = constrain(x, mesh, "batch", "seq", "d_model")
+
+    def body(x, lp):
+        return _layer(lp, x, positions, cfg, mesh)
+
+    x, aux = _scan_layers(body, x, _cast_layer_params(params["layers"], cfg), cfg)
+    x = nn.rmsnorm({"scale": params["ln_f"]}, x)
+    return x, jnp.sum(aux)
+
+
+def loss_fn(params, batch, cfg: TransformerConfig, mesh=None, aux_weight: float = 0.01):
+    """Chunked cross-entropy over the model-sharded vocab."""
+    x, aux = forward(params, batch["tokens"], cfg, mesh)
+    b, s, d = x.shape
+    head = params["head"]["w"].astype(cfg.compute_dtype)
+    c = min(cfg.ce_chunk, s)
+    n_chunk = s // c if s % c == 0 else 1
+    c = s // n_chunk
+
+    def ce_block(args):
+        xb, lb = args                              # (B, c, d), (B, c)
+        logits = (xb @ head).astype(jnp.float32)   # (B, c, V@model)
+        logits = constrain(logits, mesh, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    xs = x.reshape(b, n_chunk, c, d).swapaxes(0, 1)
+    ls = batch["labels"].reshape(b, n_chunk, c).swapaxes(0, 1)
+    tot = jnp.sum(jax.lax.map(ce_block, (xs, ls)))
+    return tot / (b * s) + aux_weight * aux
+
+
+# ------------------------------------------------------------------ serving
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or cfg.compute_dtype
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_axes():
+    ax = ("layers", "cache_batch", "cache_seq", "kv_heads", "d_head")
+    return {"k": ax, "v": ax, "pos": ("cache_batch",)}
+
+
+def prefill(params, tokens, cache, cfg: TransformerConfig, mesh=None):
+    """Full-sequence prefill; fills cache[:, :, :S] and returns last logits."""
+    b, s = tokens.shape
+    x = nn.embed(params["embed"], tokens, cfg.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = constrain(x, mesh, "batch", "seq", "d_model")
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = cfg.compute_dtype
+
+    def body(x, lp):
+        y = nn.rmsnorm({"scale": lp["ln1"]}, x)
+        q = (y @ lp["wq"].astype(dt)).reshape(b, s, h, dh)
+        k = (y @ lp["wk"].astype(dt)).reshape(b, s, kv, dh)
+        v = (y @ lp["wv"].astype(dt)).reshape(b, s, kv, dh)
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+        o = _attend(q, k, v, positions, positions, cfg, mesh)
+        x = x + (o.reshape(b, s, h * dh) @ lp["wo"].astype(dt))
+        y = nn.rmsnorm({"scale": lp["ln2"]}, x)
+        if cfg.moe is None:
+            x = x + _dense_ffn(lp, y, cfg)
+        else:
+            yf, _ = _moe_ffn(lp, y, cfg, mesh)
+            x = x + yf
+        x = constrain(x, mesh, "batch", "seq", "d_model")
+        return x, (k, v)
+
+    x, (ks, vs) = _scan_layers(body, x, _cast_layer_params(params["layers"], cfg), cfg)
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], constrain(ks, mesh, "layers", "cache_batch", "cache_seq", "kv_heads", "d_head"),
+        (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], constrain(vs, mesh, "layers", "cache_batch", "cache_seq", "kv_heads", "d_head"),
+        (0, 0, 0, 0, 0))
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    x = nn.rmsnorm({"scale": params["ln_f"]}, x[:, -1:])
+    logits = (x @ params["head"]["w"].astype(dt)).astype(jnp.float32)
+    return constrain(logits, mesh, "batch", None, "vocab"), cache
+
+
+def decode_step(params, tokens, cache, cfg: TransformerConfig, mesh=None):
+    """One-token decode against a (possibly huge) KV cache.
+
+    Cache seq is model-sharded (flash-decoding style split-S): QK^T partials,
+    masked softmax and AV are local per shard; XLA inserts the cross-shard
+    softmax reductions. O(S) — this is why long_500k is a decode-only cell for
+    the full-attention archs (DESIGN.md §4)."""
+    b = tokens.shape[0]
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = cfg.compute_dtype
+    group = h // kv
+    x = nn.embed(params["embed"], tokens[:, None], dt)          # (B, 1, d)
+    pos = cache["pos"]                                           # (B,)
+    s_max = cache["k"].shape[2]
+    kv_pos = jnp.arange(s_max)
+
+    def body(carry, inp):
+        x = carry
+        lp, ck, cv = inp
+        y = nn.rmsnorm({"scale": lp["ln1"]}, x)
+        q = (y @ lp["wq"].astype(dt)).reshape(b, 1, h, dh)
+        knew = (y @ lp["wk"].astype(dt)).reshape(b, 1, kv, dh)
+        vnew = (y @ lp["wv"].astype(dt)).reshape(b, 1, kv, dh)
+        q = _rope(q, pos[:, None], cfg.rope_theta)
+        knew = _rope(knew, pos[:, None], cfg.rope_theta)
+        # write new kv at pos (batched scatter)
+        ck = jax.vmap(lambda c, kn, p: jax.lax.dynamic_update_slice(c, kn, (p, 0, 0)))(
+            ck, knew, pos)
+        cv = jax.vmap(lambda c, vn, p: jax.lax.dynamic_update_slice(c, vn, (p, 0, 0)))(
+            cv, vnew, pos)
+        qg = q.reshape(b, kv, group, dh)
+        s = jnp.einsum("bkgd,bskd->bkgs", qg, ck, preferred_element_type=jnp.float32)
+        s *= dh ** -0.5
+        mask = (kv_pos[None, :] <= pos[:, None])[:, None, None, :]
+        s = jnp.where(mask, s, -1e30)
+        p_att = jax.nn.softmax(s, axis=-1).astype(dt)
+        o = jnp.einsum("bkgs,bskd->bkgd", p_att, cv).reshape(b, 1, h * dh)
+        x = x + o @ lp["wo"].astype(dt)
+        y = nn.rmsnorm({"scale": lp["ln2"]}, x)
+        if cfg.moe is None:
+            x = x + _dense_ffn(lp, y, cfg)
+        else:
+            yf, _ = _moe_ffn(lp, y, cfg, mesh)
+            x = x + yf
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    cache = dict(cache, k=ks, v=vs, pos=pos + 1)
+    x = nn.rmsnorm({"scale": params["ln_f"]}, x)
+    logits = (x @ params["head"]["w"].astype(dt)).astype(jnp.float32)
+    return constrain(logits, mesh, "batch", None, "vocab"), cache

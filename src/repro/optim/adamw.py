@@ -1,0 +1,99 @@
+"""AdamW + LR schedules + global-norm clipping (optax is not available
+offline — this is the framework's own optimizer substrate).
+
+Optimizer state mirrors the param pytree, so every state leaf inherits the
+param's sharding (ZeRO: m/v are sharded exactly like the fsdp params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"     # cosine | linear | constant
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+    master: Any = None   # f32 master copy when params are low-precision
+                         # (bf16 compute params halve FSDP-gather + grad-
+                         # reduce wire bytes; the master keeps AdamW exact)
+
+
+def init(params, keep_master: bool = False) -> OptState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params) if keep_master else None
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(f32, params),
+                    v=jax.tree.map(f32, params),
+                    master=master)
+
+
+def schedule_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step.astype(jnp.float32) - cfg.warmup_steps)
+        / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - t
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def apply(cfg: AdamWConfig, params, grads, state: OptState):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    metrics = {}
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        metrics["grad_norm"] = gnorm
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    metrics["lr"] = lr
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, master):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        ref = master.astype(jnp.float32)
+        new_master = ref - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * ref)
+        return new_master.astype(p.dtype), m, v, new_master
+
+    masters = state.master if state.master is not None else params
+    out = jax.tree.map(upd, params, grads, state.m, state.v, masters)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    new_master = pick(3) if state.master is not None else None
+    return pick(0), OptState(step, pick(1), pick(2), new_master), metrics

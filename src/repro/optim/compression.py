@@ -1,0 +1,44 @@
+"""Gradient compression for the data-parallel all-reduce (1000-node trick).
+
+int8 quantization with per-leaf scale and error feedback (residual carried to
+the next step), applied *before* the data-axis psum. At 1000+ nodes the
+gradient all-reduce is the dominant cross-pod collective; int8 cuts its bytes
+4x vs f32 (2x vs bf16) at negligible quality cost when error feedback is on
+(1-bit Adam / Dean et al. lineage).
+
+Used by train_step when cfg.grad_compression == "int8_ef".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, residual):
+    """Quantize grads + error feedback. Returns (q_tree, scales, new_residual).
+
+    residual holds the quantization error from the previous step; adding it
+    back before quantizing makes the compression unbiased over time."""
+    if residual is None:
+        residual = jax.tree.map(jnp.zeros_like, grads)
+    fed = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    qs = jax.tree.map(quantize_int8, fed)
+    q = jax.tree.map(lambda t: t[0], qs, is_leaf=lambda t: isinstance(t, tuple))
+    s = jax.tree.map(lambda t: t[1], qs, is_leaf=lambda t: isinstance(t, tuple))
+    deq = jax.tree.map(dequantize_int8, q, s)
+    new_residual = jax.tree.map(lambda f, d: f - d, fed, deq)
+    return q, s, new_residual
+
+
+def decompress_tree(q, s):
+    return jax.tree.map(dequantize_int8, q, s)

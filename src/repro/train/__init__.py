@@ -1,0 +1,3 @@
+from repro.train.step import TrainState, init_state, make_eval_step, make_train_step
+
+__all__ = ["TrainState", "init_state", "make_eval_step", "make_train_step"]

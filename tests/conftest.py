@@ -1,0 +1,27 @@
+import jax
+import numpy as np
+import pytest
+
+# Tests run single-device on CPU (the dry-run alone forges 512 host devices,
+# inside its own subprocess — never here).
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    """Shared clustered corpus: (x, queries, gt_ids). Session-scoped because
+    ground truth is the slowest part of every ANN test."""
+    from repro.core import eval as E
+    from repro.data.synthetic import VectorDatasetSpec, clustered_vectors
+
+    x, q = clustered_vectors(
+        jax.random.PRNGKey(0),
+        VectorDatasetSpec("unit", n=2000, d=48, n_queries=100, n_clusters=16),
+    )
+    _, gt_i = E.ground_truth(x, q, k=10)
+    return x, q, gt_i

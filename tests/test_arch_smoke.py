@@ -1,0 +1,154 @@
+"""Per-arch smoke tests: every assigned architecture instantiates a REDUCED
+config of the same family and runs one forward/train step on CPU, asserting
+output shapes + no NaNs. Full configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs import base as cb
+from repro.launch import steps
+
+
+def _finite(tree) -> bool:
+    return all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(tree)
+               if jnp.issubdtype(x.dtype, jnp.floating))
+
+
+def _smoke_batch(arch, bound, key):
+    if arch.family == "lm":
+        return cb.lm_smoke_batch(key, bound.cfg, bound.shape)
+    if arch.family == "gnn":
+        return cb.gnn_smoke_batch(key, bound.cfg, bound.shape)
+    if arch.family == "recsys":
+        return cb.recsys_smoke_batch(key, bound.cfg, bound.shape)
+    raise ValueError(arch.family)
+
+
+LM_ARCHS = ["dbrx-132b", "deepseek-moe-16b", "yi-34b", "granite-20b", "minitron-4b"]
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_train_smoke(arch_id):
+    arch = configs.get(arch_id)
+    bound = steps.bind(arch, "train_4k", reduced=True)
+    state = bound.init_fn(jax.random.PRNGKey(0))
+    batch = _smoke_batch(arch, bound, jax.random.PRNGKey(1))
+    state, metrics = bound.step_fn(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # loss near ln(vocab) at init for a uniform predictor
+    assert float(metrics["loss"]) < np.log(bound.cfg.vocab) * 2
+    assert _finite(state.params)
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_lm_prefill_decode_smoke(arch_id):
+    arch = configs.get(arch_id)
+    bound_p = steps.bind(arch, "prefill_32k", reduced=True)
+    params = bound_p.init_fn(jax.random.PRNGKey(0))
+    batch = _smoke_batch(arch, bound_p, jax.random.PRNGKey(1))
+    logits, cache = bound_p.step_fn(params, batch)
+    b, s = batch["tokens"].shape
+    assert logits.shape == (b, 1, bound_p.cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache["pos"][0]) == s
+
+    bound_d = steps.bind(arch, "decode_32k", reduced=True)
+    dbatch = _smoke_batch(arch, bound_d, jax.random.PRNGKey(2))
+    logits2, cache2 = bound_d.step_fn(params, dbatch)
+    assert logits2.shape == (dbatch["tokens"].shape[0], 1, bound_d.cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+    assert int(cache2["pos"][0]) == int(dbatch["cache"]["pos"][0]) + 1
+
+
+@pytest.mark.parametrize("shape_name",
+                         ["full_graph_sm", "minibatch_lg", "ogb_products", "molecule"])
+def test_dimenet_smoke(shape_name):
+    arch = configs.get("dimenet")
+    bound = steps.bind(arch, shape_name, reduced=True)
+    state = bound.init_fn(jax.random.PRNGKey(0))
+    batch = _smoke_batch(arch, bound, jax.random.PRNGKey(1))
+    state, metrics = bound.step_fn(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert _finite(state.params)
+
+
+RECSYS_ARCHS = ["wide-deep", "deepfm", "fm", "xdeepfm"]
+
+
+@pytest.mark.parametrize("arch_id", RECSYS_ARCHS)
+def test_recsys_train_smoke(arch_id):
+    arch = configs.get(arch_id)
+    bound = steps.bind(arch, "train_batch", reduced=True)
+    state = bound.init_fn(jax.random.PRNGKey(0))
+    batch = _smoke_batch(arch, bound, jax.random.PRNGKey(1))
+    state, metrics = bound.step_fn(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["loss"]) < 2.0  # BCE at init ~ 0.69
+    assert _finite(state.params)
+
+
+@pytest.mark.parametrize("arch_id", RECSYS_ARCHS)
+def test_recsys_serve_smoke(arch_id):
+    arch = configs.get(arch_id)
+    bound = steps.bind(arch, "serve_p99", reduced=True)
+    params = bound.init_fn(jax.random.PRNGKey(0))
+    batch = _smoke_batch(arch, bound, jax.random.PRNGKey(1))
+    scores = bound.step_fn(params, batch)
+    assert scores.shape == (cb.RECSYS_SMOKE["batch"],)
+    assert bool(jnp.all((scores >= 0) & (scores <= 1)))
+
+
+@pytest.mark.parametrize("arch_id", RECSYS_ARCHS)
+def test_recsys_retrieval_smoke(arch_id):
+    arch = configs.get(arch_id)
+    bound = steps.bind(arch, "retrieval_cand", reduced=True)
+    batch = _smoke_batch(arch, bound, jax.random.PRNGKey(1))
+    top, idx = bound.step_fn({}, batch)
+    assert top.shape == (100,) and idx.shape == (100,)
+    # scores descending, indices valid
+    assert bool(jnp.all(jnp.diff(top) <= 0))
+    assert bool(jnp.all((idx >= 0) & (idx < batch["cand_embs"].shape[0])))
+    # exactness vs brute force
+    ref = jnp.argsort(-(batch["cand_embs"] @ batch["query_emb"]))[:100]
+    assert set(np.asarray(idx).tolist()) == set(np.asarray(ref).tolist())
+
+
+def test_ann_build_and_search_smoke():
+    arch = configs.get("rnnd-ann")
+    bound = steps.bind(arch, "build_1m", reduced=True)
+    x = jax.random.normal(jax.random.PRNGKey(0), bound.input_specs["x"].shape)
+    g = bound.step_fn({}, {"x": x})
+    assert g.neighbors.shape[0] == x.shape[0]
+    deg = jnp.sum(g.neighbors >= 0, 1)
+    assert float(jnp.mean(deg.astype(jnp.float32))) > 2.0
+
+    bound_s = steps.bind(arch, "search_1m", reduced=True)
+    nq = bound_s.input_specs["queries"].shape[0]
+    ids, dists = bound_s.step_fn({}, {
+        "x": x, "neighbors": g.neighbors, "dists": g.dists,
+        "queries": x[:nq] + 0.01})
+    assert ids.shape[0] == nq
+    assert bool(jnp.all(jnp.isfinite(dists)))
+
+
+def test_registry_covers_assignment():
+    assert len(configs.ASSIGNED) == 10
+    assert len(configs.all_cells()) == 40
+    # exact full-config numbers from the assignment table
+    dbrx = configs.get("dbrx-132b").make_config("train_4k", False)
+    assert (dbrx.n_layers, dbrx.d_model, dbrx.n_heads, dbrx.n_kv_heads,
+            dbrx.vocab, dbrx.moe.n_experts, dbrx.moe.top_k) == (
+        40, 6144, 48, 8, 100352, 16, 4)
+    yi = configs.get("yi-34b").make_config("train_4k", False)
+    assert (yi.n_layers, yi.d_model, yi.n_heads, yi.n_kv_heads, yi.d_ff,
+            yi.vocab) == (60, 7168, 56, 8, 20480, 64000)
+    assert 30e9 < yi.n_params < 40e9
+    assert 120e9 < dbrx.n_params < 140e9
+    ds = configs.get("deepseek-moe-16b").make_config("train_4k", False)
+    assert 14e9 < ds.n_params < 19e9
+    g20 = configs.get("granite-20b").make_config("train_4k", False)
+    assert 18e9 < g20.n_params < 22e9
+    mini = configs.get("minitron-4b").make_config("train_4k", False)
+    assert 3e9 < mini.n_params < 6e9

@@ -1,0 +1,146 @@
+"""Unit + property tests for the fixed-degree graph substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as G
+
+
+def _mk_graph(rng, n, m, fill=0.6):
+    nbrs = np.full((n, m), -1, np.int32)
+    dists = np.full((n, m), np.inf, np.float32)
+    for i in range(n):
+        k = int(min(rng.integers(0, int(m * fill) + 1), n - 1))
+        ids = rng.choice([v for v in range(n) if v != i], size=k, replace=False)
+        d = np.sort(rng.random(k).astype(np.float32))
+        nbrs[i, :k] = ids
+        dists[i, :k] = d
+    return G.Graph(jnp.asarray(nbrs), jnp.asarray(dists), jnp.zeros((n, m), jnp.uint8))
+
+
+def _check_row_invariant(g):
+    nbrs = np.asarray(g.neighbors)
+    dists = np.asarray(g.dists)
+    for i in range(nbrs.shape[0]):
+        valid = nbrs[i] >= 0
+        k = valid.sum()
+        assert valid[:k].all(), f"row {i}: valid entries not a prefix"
+        assert np.all(np.isinf(dists[i, k:]))
+        assert np.all(np.diff(dists[i, :k]) >= 0), f"row {i}: not sorted"
+        ids = nbrs[i, :k]
+        assert len(set(ids.tolist())) == k, f"row {i}: duplicate neighbor"
+
+
+def test_empty_graph_shapes():
+    g = G.empty_graph(5, 3)
+    assert g.n == 5 and g.capacity == 3
+    assert int(G.out_degrees(g).sum()) == 0
+
+
+def test_merge_inserts_new_edges(rng):
+    g = _mk_graph(rng, 12, 6)
+    src = jnp.array([0, 1, 2], jnp.int32)
+    dst = jnp.array([5, 6, 7], jnp.int32)
+    dist = jnp.array([0.01, 0.02, 0.03], jnp.float32)
+    out = G.merge_candidate_edges(g, src, dst, dist)
+    _check_row_invariant(out)
+    nbrs = np.asarray(out.neighbors)
+    assert 5 in nbrs[0] and 6 in nbrs[1] and 7 in nbrs[2]
+    # inserted edges are flagged NEW
+    flags = np.asarray(out.flags)
+    assert flags[0][list(nbrs[0]).index(5)] == 1
+
+
+def test_merge_existing_edge_keeps_flag(rng):
+    g = _mk_graph(rng, 10, 5)
+    nbrs = np.asarray(g.neighbors)
+    # pick an existing edge and re-offer it as a candidate
+    i = next(i for i in range(10) if (nbrs[i] >= 0).any())
+    j = nbrs[i][nbrs[i] >= 0][0]
+    d = float(np.asarray(g.dists)[i][0])
+    out = G.merge_candidate_edges(
+        g, jnp.array([i], jnp.int32), jnp.array([j], jnp.int32), jnp.array([d], jnp.float32)
+    )
+    flags = np.asarray(out.flags)
+    row = list(np.asarray(out.neighbors)[i])
+    assert flags[i][row.index(j)] == 0, "existing edge must keep OLD flag"
+    _check_row_invariant(out)
+
+
+def test_merge_respects_capacity(rng):
+    g = _mk_graph(rng, 8, 4, fill=1.0)
+    src = jnp.full((20,), 0, jnp.int32)
+    dst = jnp.arange(1, 21, dtype=jnp.int32) % 8
+    dist = jnp.linspace(0.001, 0.002, 20)
+    out = G.merge_candidate_edges(g, src, dst, dist)
+    assert int(G.out_degrees(out).max()) <= 4
+    _check_row_invariant(out)
+
+
+def test_add_reverse_edges_caps_degrees(rng):
+    n, m, r = 16, 8, 3
+    g = _mk_graph(rng, n, m, fill=1.0)
+    out = G.add_reverse_edges(g, r)
+    _check_row_invariant(out)
+    assert int(G.out_degrees(out).max()) <= r
+    assert int(G.in_degrees(out).max()) <= r
+
+
+def test_add_reverse_edges_contains_reverses(rng):
+    # with generous caps, every edge's reverse must appear
+    n, m = 10, 8
+    g = _mk_graph(rng, n, m, fill=0.3)
+    out = G.add_reverse_edges(g, m)
+    fwd = set()
+    nbrs = np.asarray(g.neighbors)
+    for i in range(n):
+        for j in nbrs[i][nbrs[i] >= 0]:
+            fwd.add((i, int(j)))
+    onbrs = np.asarray(out.neighbors)
+    edges = set()
+    for i in range(n):
+        for j in onbrs[i][onbrs[i] >= 0]:
+            edges.add((i, int(j)))
+    for (u, v) in fwd:
+        assert (v, u) in edges, f"reverse of ({u},{v}) missing"
+
+
+def test_in_out_degree_consistency(rng):
+    g = _mk_graph(rng, 20, 6)
+    assert int(G.out_degrees(g).sum()) == int(G.in_degrees(g).sum())
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(4, 24),
+    m=st.integers(2, 8),
+    n_cand=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_merge_never_breaks_invariant(n, m, n_cand, seed):
+    rng = np.random.default_rng(seed)
+    g = _mk_graph(rng, n, m)
+    src = jnp.asarray(rng.integers(-1, n, n_cand), jnp.int32)
+    dst = jnp.asarray(rng.integers(-1, n, n_cand), jnp.int32)
+    dist = jnp.asarray(rng.random(n_cand), jnp.float32)
+    out = G.merge_candidate_edges(g, src, dst, dist)
+    _check_row_invariant(out)
+    assert int(G.out_degrees(out).max()) <= m
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(4, 20),
+    m=st.integers(2, 8),
+    r=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_reverse_edges_caps(n, m, r, seed):
+    rng = np.random.default_rng(seed)
+    g = _mk_graph(rng, n, m, fill=1.0)
+    out = G.add_reverse_edges(g, r)
+    _check_row_invariant(out)
+    assert int(G.out_degrees(out).max()) <= min(r, m)
+    assert int(G.in_degrees(out).max()) <= r

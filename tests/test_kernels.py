@@ -1,0 +1,119 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle, swept
+over shapes and dtypes, plus hypothesis property checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.fm_interact import fm_interact, fm_interact_ref
+from repro.kernels.pairwise_l2 import pairwise_l2, pairwise_l2_ref
+from repro.kernels.rng_prune import rng_prune, rng_prune_ref
+
+
+# ---------------------------------------------------------------- pairwise_l2
+@pytest.mark.parametrize("na,nb,d", [
+    (8, 8, 4), (128, 256, 32), (300, 100, 96), (257, 513, 128), (64, 64, 960),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_l2_sweep(na, nb, d, dtype):
+    ka, kb = jax.random.split(jax.random.PRNGKey(na * 31 + nb))
+    a = jax.random.normal(ka, (na, d), dtype)
+    b = jax.random.normal(kb, (nb, d), dtype)
+    got = pairwise_l2(a, b, tile_m=128, tile_n=128)
+    ref = pairwise_l2_ref(a, b)
+    rtol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=rtol, atol=1e-4)
+
+
+def test_pairwise_l2_zero_distance_diagonal():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 16))
+    d = pairwise_l2(x, x, tile_m=64, tile_n=64)
+    np.testing.assert_allclose(np.asarray(jnp.diag(d)), 0.0, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(na=st.integers(1, 80), nb=st.integers(1, 80), d=st.integers(1, 64),
+       seed=st.integers(0, 2**31 - 1))
+def test_pairwise_l2_property(na, nb, d, seed):
+    k = jax.random.PRNGKey(seed)
+    a = jax.random.normal(k, (na, d))
+    b = jax.random.normal(jax.random.fold_in(k, 1), (nb, d))
+    got = pairwise_l2(a, b, tile_m=32, tile_n=32)
+    assert got.shape == (na, nb)
+    assert bool(jnp.all(got >= 0))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(pairwise_l2_ref(a, b)),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ rng_prune
+def _mk_rows(key, n, m, n_pts, d, frac_valid=0.8, frac_new=0.5):
+    kx, ki, kf = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (n_pts, d), jnp.float32)
+    ids = jax.random.randint(ki, (n, m), 0, n_pts, jnp.int32)
+    # distance-sorted rows w.r.t. a phantom center (row index itself);
+    # the center must not appear in its own row (exact-tie fp boundary that
+    # real graphs exclude via the no-self-loop invariant)
+    base = jnp.arange(n, dtype=jnp.int32) % n_pts
+    ids = jnp.where(ids == base[:, None], (ids + 1) % n_pts, ids)
+    diff = x[ids] - x[base][:, None, :]
+    dists = jnp.sum(diff * diff, axis=-1)
+    n_valid = max(1, int(m * frac_valid))
+    ids = ids.at[:, n_valid:].set(-1)
+    dists = jnp.where(ids >= 0, dists, jnp.inf)
+    order = jnp.argsort(dists, axis=1)
+    ids = jnp.take_along_axis(ids, order, axis=1)
+    dists = jnp.take_along_axis(dists, order, axis=1)
+    flags = (jax.random.uniform(kf, (n, m)) < frac_new).astype(jnp.uint8)
+    return x, ids, dists, flags
+
+
+@pytest.mark.parametrize("n,m,d", [(8, 8, 16), (16, 24, 4), (24, 32, 96), (8, 16, 960)])
+@pytest.mark.parametrize("frac_new", [1.0, 0.5, 0.0])
+def test_rng_prune_sweep(n, m, d, frac_new):
+    x, ids, dists, flags = _mk_rows(jax.random.PRNGKey(n * 7 + m), n, m, 64, d,
+                                    frac_new=frac_new)
+    keep, red_w, red_d = rng_prune(x, ids, dists, flags, tile_c=8)
+    vecs = x[jnp.maximum(ids, 0)]
+    rkeep, rw, rd = rng_prune_ref(ids, dists, flags, vecs)
+    np.testing.assert_array_equal(np.asarray(keep), np.asarray(rkeep).astype(bool))
+    np.testing.assert_array_equal(np.asarray(red_w), np.asarray(rw))
+    mask = np.asarray(rw) >= 0
+    np.testing.assert_allclose(np.asarray(red_d)[mask], np.asarray(rd)[mask],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rng_prune_matches_core_path():
+    """The use_pallas=True route of rnn_descent must equal the jnp route."""
+    from repro.core import rnn_descent as rd
+    from repro.data.synthetic import VectorDatasetSpec, clustered_vectors
+
+    x, _ = clustered_vectors(
+        jax.random.PRNGKey(5), VectorDatasetSpec("k", 512, 32, 8, n_clusters=8))
+    cfg_j = rd.RNNDescentConfig(s=6, r=12, t1=2, t2=2, capacity=16, chunk=128)
+    cfg_p = rd.RNNDescentConfig(s=6, r=12, t1=2, t2=2, capacity=16, chunk=128,
+                                use_pallas=True)
+    gj = rd.build(x, cfg_j, jax.random.PRNGKey(6))
+    gp = rd.build(x, cfg_p, jax.random.PRNGKey(6))
+    np.testing.assert_array_equal(np.asarray(gj.neighbors), np.asarray(gp.neighbors))
+
+
+# ---------------------------------------------------------------- fm_interact
+@pytest.mark.parametrize("b,f,d", [(4, 3, 8), (512, 39, 10), (1000, 40, 32), (64, 26, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fm_interact_sweep(b, f, d, dtype):
+    e = jax.random.normal(jax.random.PRNGKey(b + f), (b, f, d), dtype)
+    got = fm_interact(e, tile_b=256)
+    ref = fm_interact_ref(e)
+    rtol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=rtol, atol=1e-3)
+
+
+def test_fm_interact_matches_explicit_pairs():
+    """Sum-square trick == explicit sum over <v_i, v_j> pairs."""
+    e = jax.random.normal(jax.random.PRNGKey(3), (16, 7, 5))
+    explicit = 0.5 * (
+        jnp.einsum("bfd,bgd->b", e, e) - jnp.einsum("bfd,bfd->b", e, e)
+    )
+    np.testing.assert_allclose(np.asarray(fm_interact(e)), np.asarray(explicit),
+                               rtol=1e-5, atol=1e-5)

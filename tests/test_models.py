@@ -1,0 +1,176 @@
+"""Model-level correctness: flash attention vs naive softmax oracle, DimeNet
+gather vs factorized equivalence, MoE dropping vs dense, prefill/decode vs
+full forward, EmbeddingBag fixed-hot vs ragged."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import dimenet as dm
+from repro.models import recsys as rs
+from repro.models import transformer as tf
+
+
+# ------------------------------------------------------------ attention
+def _naive_attention(q, k, v, q_pos, kv_pos, causal=True):
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, sq, kvh, h // kvh, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * dh ** -0.5
+    if causal:
+        mask = q_pos[:, None, None, :, None] >= kv_pos[:, None, None, None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    return jnp.moveaxis(o, 3, 1).reshape(b, sq, h, dh)
+
+
+@pytest.mark.parametrize("sq,skv,blocks", [(16, 16, 1), (32, 32, 4), (8, 64, 8)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_naive(sq, skv, blocks, causal):
+    cfg = tf.TransformerConfig(name="t", n_layers=1, d_model=32, n_heads=4,
+                               n_kv_heads=2, d_ff=64, vocab=64, d_head=8,
+                               q_chunk=skv // blocks, compute_dtype=jnp.float32)
+    ks = jax.random.split(jax.random.PRNGKey(sq * skv), 3)
+    b = 2
+    q = jax.random.normal(ks[0], (b, sq, 4, 8))
+    k = jax.random.normal(ks[1], (b, skv, 2, 8))
+    v = jax.random.normal(ks[2], (b, skv, 2, 8))
+    q_pos = jnp.broadcast_to(jnp.arange(skv - sq, skv), (b, sq))  # suffix queries
+    kv_pos = jnp.broadcast_to(jnp.arange(skv), (b, skv))
+    got = tf._attend(q, k, v, q_pos, kv_pos, cfg, None, causal=causal)
+    ref = _naive_attention(q, k, v, q_pos, kv_pos, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-4, atol=2e-5)
+
+
+def test_prefill_then_decode_matches_forward():
+    """prefill(t[:n]) + decode(t[n]) logits == forward(t[:n+1]) last logits."""
+    cfg = tf.TransformerConfig(name="t", n_layers=2, d_model=48, n_heads=4,
+                               n_kv_heads=2, d_ff=96, vocab=128, d_head=12,
+                               q_chunk=8, ce_chunk=8, remat=False,
+                               compute_dtype=jnp.float32)
+    params, _ = tf.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0, 128)
+    cache = tf.init_cache(cfg, 2, 24, dtype=jnp.float32)
+    _, cache = tf.prefill(params, toks[:, :16], cache, cfg)
+    dec_logits, _ = tf.decode_step(params, toks[:, 16], cache, cfg)
+
+    x, _ = tf.forward(params, toks, cfg)
+    from repro.models import nn
+    ref_logits = (nn.rmsnorm({"scale": params["ln_f"]}, x[:, -1:])
+                  @ params["head"]["w"].astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(ref_logits),
+                               rtol=5e-3, atol=5e-4)
+
+
+def test_moe_dropping_matches_dense_generous_capacity():
+    moe_kw = dict(n_experts=4, top_k=2, n_shared=1, d_ff=32, capacity_factor=4.0)
+    mk = lambda impl: tf.TransformerConfig(
+        name="m", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=0,
+        vocab=128, d_head=16, q_chunk=16, ce_chunk=16, compute_dtype=jnp.float32,
+        moe=tf.MoEConfig(impl=impl, **moe_kw))
+    params, _ = tf.init(jax.random.PRNGKey(2), mk("dense"))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(3), (2, 32), 0, 128),
+             "labels": jax.random.randint(jax.random.PRNGKey(4), (2, 32), 0, 128)}
+    l_dense = tf.loss_fn(params, batch, mk("dense"))
+    l_drop = tf.loss_fn(params, batch, mk("dropping"))
+    np.testing.assert_allclose(float(l_dense), float(l_drop), rtol=1e-4)
+
+
+# -------------------------------------------------------------- dimenet
+def _tiny_graph(seed, n=16, e=48, d_feat=8):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = (src + rng.integers(1, n, e)).astype(np.int32) % n
+    tk, tj = [], []
+    for e1 in range(e):
+        for e2 in range(e):
+            if dst[e1] == src[e2]:
+                tk.append(e1)
+                tj.append(e2)
+    return dict(
+        node_feat=jnp.asarray(rng.standard_normal((n, d_feat)), jnp.float32),
+        pos=jnp.asarray(rng.standard_normal((n, 3)) * 2, jnp.float32),
+        edge_src=jnp.asarray(src), edge_dst=jnp.asarray(dst),
+        edge_mask=jnp.ones(e),
+        triplet_kj=jnp.asarray(tk, jnp.int32), triplet_ji=jnp.asarray(tj, jnp.int32),
+        triplet_mask=jnp.ones(len(tk)),
+        graph_ids=jnp.zeros(n, jnp.int32), labels=jnp.zeros(1),
+        node_mask=jnp.ones(n),
+    )
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_dimenet_factorized_equals_gather(seed):
+    """The addition-theorem factorization is EXACT (DESIGN.md §4): same
+    params, same graph, triplets enumerated with k==i included."""
+    kw = dict(n_blocks=3, d_hidden=24, n_bilinear=4, n_spherical=6, n_radial=4,
+              d_feat=8, n_out=1, task="graph_reg", compute_dtype=jnp.float32)
+    cfg_g = dm.DimeNetConfig(triplet_impl="gather", **kw)
+    cfg_f = dm.DimeNetConfig(triplet_impl="factorized", **kw)
+    params, _ = dm.init(jax.random.PRNGKey(seed), cfg_g)
+    batch = _tiny_graph(seed)
+    out_g = dm.forward(params, batch, cfg_g)
+    out_f = dm.forward(params, batch, cfg_f)
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_f),
+                               rtol=5e-4, atol=5e-5)
+
+
+def test_dimenet_monomial_factorization_exact():
+    """<phi_p(u), phi_p(v)> == (u.v)^p for every degree block."""
+    rng = np.random.default_rng(0)
+    u = rng.standard_normal((50, 3))
+    u /= np.linalg.norm(u, axis=1, keepdims=True)
+    v = rng.standard_normal((50, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    pu = np.asarray(dm.monomial_features(jnp.asarray(u), 7))
+    pv = np.asarray(dm.monomial_features(jnp.asarray(v), 7))
+    dots = (u * v).sum(1)
+    for p, sl in enumerate(dm._monomial_block_slices(7)):
+        got = (pu[:, sl] * pv[:, sl]).sum(1)
+        np.testing.assert_allclose(got, dots ** p, rtol=1e-5, atol=1e-6)
+
+
+def test_legendre_recurrence():
+    x = np.linspace(-1, 1, 11)
+    got = np.asarray(dm.legendre_angular(jnp.asarray(x), 7))
+    for l in range(7):
+        ref = np.polynomial.legendre.legval(x, [0] * l + [1])
+        np.testing.assert_allclose(got[:, l], ref, rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------- recsys
+def test_embedding_bag_fixed_equals_ragged():
+    table = jax.random.normal(jax.random.PRNGKey(0), (100, 8))
+    ids = jax.random.randint(jax.random.PRNGKey(1), (6, 3), 0, 100)
+    fixed = rs.embedding_bag(table, ids)
+    ragged = rs.embedding_bag_ragged(
+        table, ids.reshape(-1), jnp.repeat(jnp.arange(6), 3), n_bags=6)
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(ragged), rtol=1e-6)
+    fixed_m = rs.embedding_bag(table, ids, mode="mean")
+    ragged_m = rs.embedding_bag_ragged(
+        table, ids.reshape(-1), jnp.repeat(jnp.arange(6), 3), n_bags=6, mode="mean")
+    np.testing.assert_allclose(np.asarray(fixed_m), np.asarray(ragged_m), rtol=1e-6)
+
+
+def test_cin_matches_reference():
+    """CIN layer == explicit outer-product + weighted compress."""
+    cfg = rs.RecsysConfig(name="x", arch="xdeepfm", n_fields=5, embed_dim=4,
+                          vocab_sizes=(10,) * 5, cin_dims=(6,), interaction="cin",
+                          compute_dtype=jnp.float32)
+    params, _ = rs.init(jax.random.PRNGKey(0), cfg)
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (3, 5, 4))
+    got = rs._cin(params, x0, cfg)
+    w = params["cin"]["w0"]                    # (6, 5, 5)
+    ref = np.zeros((3, 6))
+    x0n = np.asarray(x0)
+    for b in range(3):
+        for h in range(6):
+            acc = np.zeros(4)
+            for i in range(5):
+                for j in range(5):
+                    acc += np.asarray(w)[h, i, j] * x0n[b, i] * x0n[b, j]
+            ref[b, h] = acc.sum()
+    np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,108 @@
+"""The vectorized triangular RNG scan vs. a literal Algorithm-3/4 oracle."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distances as D
+from repro.core.rng import rng_scan
+
+
+def oracle_alg4(ids, dists, pair, flags_new):
+    """Sequential paper Algorithm 4 inner loop for a single vertex."""
+    m = len(ids)
+    keep, red_w, red_d = [], np.full(m, -1, np.int64), np.full(m, np.inf)
+    keep_mask = np.zeros(m, bool)
+    for i in range(m):
+        if ids[i] < 0:
+            continue
+        ok = True
+        for j in range(m):
+            if not keep_mask[j]:
+                continue
+            if (not flags_new[i]) and (not flags_new[j]):
+                continue  # both old: exempt
+            if pair[i, j] <= dists[i]:
+                ok = False
+                red_w[i] = ids[j]
+                red_d[i] = pair[i, j]
+                break
+        keep_mask[i] = ok
+    return keep_mask, red_w, red_d
+
+
+def _run_case(rng, m, d, n_valid, all_new):
+    x = rng.standard_normal((64, d)).astype(np.float32)
+    ids = np.full(m, -1, np.int64)
+    ids[:n_valid] = rng.choice(64, size=n_valid, replace=False)
+    u = rng.integers(0, 64)
+    dists = np.where(
+        ids >= 0, np.sum((x[np.maximum(ids, 0)] - x[u]) ** 2, -1), np.inf
+    ).astype(np.float32)
+    order = np.argsort(dists)
+    ids, dists = ids[order], dists[order]
+    flags_new = (
+        np.ones(m, bool) if all_new else rng.integers(0, 2, m).astype(bool)
+    )
+    vecs = x[np.maximum(ids, 0)]
+    pair = np.asarray(D.batched_gram(jnp.asarray(vecs)[None]))[0]
+    pair = np.where((ids >= 0)[:, None] & (ids >= 0)[None, :], pair, np.inf)
+
+    ref_keep, ref_w, ref_d = oracle_alg4(ids, dists, pair, flags_new)
+
+    old = ~flags_new
+    skip = (old[:, None] & old[None, :])[None]
+    got = rng_scan(
+        jnp.asarray(ids, jnp.int32)[None],
+        jnp.asarray(dists)[None],
+        jnp.asarray(pair)[None],
+        skip_pair=jnp.asarray(skip),
+    )
+    np.testing.assert_array_equal(np.asarray(got.keep)[0], ref_keep)
+    np.testing.assert_array_equal(np.asarray(got.redirect_w)[0], ref_w)
+    # redirect distances must match where a redirect exists
+    mask = ref_w >= 0
+    np.testing.assert_allclose(
+        np.asarray(got.redirect_d)[0][mask], ref_d[mask], rtol=1e-5
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(2, 24),
+    d=st.sampled_from([4, 16, 33]),
+    frac=st.floats(0.1, 1.0),
+    all_new=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rng_scan_matches_alg4_oracle(m, d, frac, all_new, seed):
+    rng = np.random.default_rng(seed)
+    n_valid = max(1, int(m * frac))
+    _run_case(rng, m, d, n_valid, all_new)
+
+
+def test_rng_scan_keeps_nearest():
+    """The nearest valid candidate is always kept (no kept w precedes it)."""
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        m = 12
+        x = rng.standard_normal((32, 8)).astype(np.float32)
+        ids = rng.choice(32, size=m, replace=False)
+        d = np.sort(rng.random(m)).astype(np.float32)
+        vecs = x[ids]
+        pair = np.asarray(D.batched_gram(jnp.asarray(vecs)[None]))[0]
+        got = rng_scan(
+            jnp.asarray(ids, jnp.int32)[None], jnp.asarray(d)[None], jnp.asarray(pair)[None]
+        )
+        assert bool(got.keep[0, 0])
+
+
+def test_rng_scan_all_old_keeps_everything():
+    """If every pair is exempt (all flags old), nothing can be dropped."""
+    rng = np.random.default_rng(2)
+    m = 10
+    ids = jnp.asarray(rng.choice(64, m, replace=False), jnp.int32)[None]
+    d = jnp.sort(jnp.asarray(rng.random(m), jnp.float32))[None]
+    pair = jnp.zeros((1, m, m))  # adversarial: everything violates RNG
+    skip = jnp.ones((1, m, m), bool)
+    got = rng_scan(ids, d, pair, skip_pair=skip)
+    assert bool(jnp.all(got.keep))

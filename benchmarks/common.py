@@ -67,22 +67,27 @@ def build_timed(builder: str, x, key=1):
     return time.perf_counter() - t0, g
 
 
-def search_sweep(x, g, q, gt, k_limit: int, l_values=SEARCH_L_SWEEP):
-    """(L, recall@1, qps) rows for one graph."""
+def search_sweep(x, g, q, gt, k_limit: int, l_values=SEARCH_L_SWEEP,
+                 visited="hashed", tile_b=256):
+    """(L, recall@1, qps, visited footprint) rows for one graph, through the
+    tiled serving driver."""
     ep = S.default_entry_point(x)
     rows = []
     for L in l_values:
-        cfg = S.SearchConfig(l=L, k=k_limit, max_iters=2 * L + 32)
-        ids, _ = S.search(x, g, q, ep, cfg)             # compile warmup
+        cfg = S.SearchConfig(l=L, k=k_limit, max_iters=2 * L + 32, visited=visited)
+        ids, _ = S.search_tiled(x, g, q, ep, cfg, tile_b=tile_b)  # compile warmup
         jax.block_until_ready(ids)
         t0 = time.perf_counter()
-        ids, _ = S.search(x, g, q, ep, cfg)
+        ids, _ = S.search_tiled(x, g, q, ep, cfg, tile_b=tile_b)
         jax.block_until_ready(ids)
         dt = time.perf_counter() - t0
+        lanes = min(tile_b, q.shape[0])
         rows.append({
             "L": L,
             "recall_at_1": round(E.recall_at_k(ids, gt), 4),
             "qps": round(q.shape[0] / dt, 1),
+            "visited": visited,
+            "visited_bytes_per_tile": S.visited_state_bytes(cfg, x.shape[0], lanes),
         })
     return rows
 

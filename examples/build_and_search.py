@@ -1,5 +1,6 @@
 """Compare all three builders (paper Figures 2+3 in miniature): construction
-time and the QPS/recall tradeoff on the same corpus.
+time and the QPS/recall tradeoff on the same corpus, served through the
+constant-memory tiled search driver.
 
     PYTHONPATH=src python examples/build_and_search.py
 """
@@ -20,6 +21,7 @@ x, q = clustered_vectors(
     VectorDatasetSpec("demo", n=6000, d=96, n_queries=400, n_clusters=48))
 _, gt = E.ground_truth(x, q, k=1)
 entry = S.default_entry_point(x)
+scfg = S.SearchConfig(l=48, k=32, max_iters=128)
 
 builders = {
     "rnn-descent": lambda: rd.build(
@@ -38,6 +40,8 @@ for name, build in builders.items():
     t0 = time.perf_counter()
     g = jax.block_until_ready(build())
     sec = time.perf_counter() - t0
-    ids, _ = S.search(x, g, q, entry, S.SearchConfig(l=48, k=32, max_iters=128))
-    print(f"{name:12s} build {sec:6.2f}s  recall@1 {E.recall_at_k(ids, gt):.4f}  "
+    stats = E.evaluate_search(x, g, q, gt, scfg, entry_points=entry, tile_b=128)
+    print(f"{name:12s} build {sec:6.2f}s  recall@1 {stats['recall_at_1']:.4f}  "
+          f"qps {stats['qps']:8.1f}  "
+          f"visited/tile {stats['visited_bytes_per_tile'] / 1024:.0f} KiB  "
           f"avg-out-degree {float(G.average_out_degree(g)):.1f}")

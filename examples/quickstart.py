@@ -5,6 +5,7 @@
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import eval as E
 from repro.core import rnn_descent as rd
@@ -23,9 +24,15 @@ t0 = time.perf_counter()
 graph = jax.block_until_ready(rd.build(x, cfg, jax.random.PRNGKey(1)))
 print(f"built RNN-Descent index for n={x.shape[0]} in {time.perf_counter()-t0:.2f}s")
 
-# 3. search — paper Algorithm 1 with query-time out-degree limit K (Eq. 4)
-entry = S.default_entry_point(x)
+# 3. serve — paper Algorithm 1 with query-time out-degree limit K (Eq. 4),
+# streamed through the constant-memory tiled driver: visited state is a
+# per-query hashed table, so peak memory is O(tile_b * slots) however large
+# the corpus or the query batch gets.
+entry = jnp.broadcast_to(                       # multi-entry seeding (B, E)
+    S.default_entry_points(x, n_entries=4)[None, :], (queries.shape[0], 4))
 for L in (16, 32, 64):
-    ids, dists = S.search(x, graph, queries, entry,
-                          S.SearchConfig(l=L, k=32, max_iters=2 * L + 32))
-    print(f"  L={L:3d}  recall@1={E.recall_at_k(ids, gt):.4f}")
+    scfg = S.SearchConfig(l=L, k=32, max_iters=2 * L + 32)
+    ids, dists = S.search_tiled(x, graph, queries, entry, scfg, tile_b=128)
+    bytes_tile = S.visited_state_bytes(scfg, x.shape[0], 128, n_entry=4)
+    print(f"  L={L:3d}  recall@1={E.recall_at_k(ids, gt):.4f}  "
+          f"visited-state/tile={bytes_tile / 1024:.0f} KiB")

@@ -31,6 +31,37 @@ def recall_at_k(pred_ids: jnp.ndarray, gt_ids: jnp.ndarray) -> float:
     return float(jnp.mean(hit))
 
 
+def evaluate_search(
+    x: jnp.ndarray,
+    g: G.Graph,
+    queries: jnp.ndarray,
+    gt_ids: jnp.ndarray,
+    cfg,
+    entry_points: jnp.ndarray | None = None,
+    tile_b: int = 256,
+    repeats: int = 2,
+) -> dict:
+    """Recall@k + QPS over the tiled serving driver (``search_tiled``).
+
+    Returns recall, queries/sec (best of ``repeats``, compile excluded by the
+    warmup repeat), and the peak visited-state footprint of one query tile —
+    the number that is now independent of the corpus size in hashed mode."""
+    from repro.core import search as S
+
+    if entry_points is None:
+        entry_points = S.default_entry_point(x, cfg.metric)
+    sec, (ids, _) = timed(
+        S.search_tiled, x, g, queries, entry_points, cfg, tile_b=tile_b,
+        repeats=repeats)
+    lanes = min(tile_b, queries.shape[0])
+    return {
+        "recall_at_1": recall_at_k(ids, gt_ids),
+        "qps": queries.shape[0] / sec,
+        "visited_mode": cfg.visited,
+        "visited_bytes_per_tile": S.visited_state_bytes(cfg, x.shape[0], lanes),
+    }
+
+
 def degree_stats(g: G.Graph) -> dict:
     out_d = np.asarray(G.out_degrees(g))
     in_d = np.asarray(G.in_degrees(g))

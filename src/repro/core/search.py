@@ -7,8 +7,50 @@ is a prefix slice — zero-cost on TPU).
 
 TPU adaptation: the paper's while-loop with dynamic candidate set becomes a
 ``lax.while_loop`` over fixed-shape state: a (B, L) beam (ids/dists/expanded)
-plus a (B, n) "inserted" bitmask for exact dedup. All queries in a batch step
-together; finished queries no-op until the whole batch converges.
+plus per-query visited bookkeeping for dedup.
+
+Visited-state memory
+--------------------
+Two interchangeable visited implementations, selected by
+``SearchConfig.visited``:
+
+``"dense"``  — the exact oracle: a (B, n+1) boolean bitmask (one scratch
+    column for masked writes). Memory is ``B * (n + 1)`` bytes and grows with
+    the corpus: at n = 1M and B = 1024 the bitmask alone is ~1 GB, which is
+    what kept the old implementation out of the paper's million-scale regime.
+
+``"hashed"`` — the production default: a per-query open-addressed hash table
+    of ``slots`` int32 entries (``slots`` a power of two sized from L,
+    max_iters and K — see :func:`resolve_slots`), probed linearly ``probes``
+    times per lookup/insert. Memory is ``B * slots * 4`` bytes, **independent
+    of n**: the default config (L=64, K=32, max_iters=256) resolves to 32768
+    slots = 128 KiB per lane, so a 256-lane tile carries 32 MiB of visited
+    state no matter whether the corpus holds 10^4 or 10^9 vectors.
+
+The hash table stores only genuinely visited vertex ids, so membership tests
+have **no false positives** — a candidate is never wrongly skipped. Lost
+insertions (probe overflow, or two fresh candidates racing for one slot in a
+single scatter) can only yield false *negatives*: a previously evicted vertex
+may be re-scored. Because the beam's worst distance is monotonically
+non-increasing, a re-scored evicted vertex can never re-enter the beam with a
+strictly better rank, and an explicit candidate-vs-beam dedup keeps the beam
+duplicate-free — so hashed search converges to the *same* result as the dense
+oracle, spending at most a few extra iterations. Trust ``"hashed"`` for
+serving; use ``"dense"`` as the exact reference in tests and when measuring
+the approximation (equal results at equal L is asserted in
+``tests/test_search.py``).
+
+Termination is per lane: a lane retires once no unexpanded candidate could
+beat its worst beam entry — with the merged beam/candidate representation
+that is the moment its frontier is exhausted (worse candidates were already
+evicted at merge, which is where the classic "best candidate > worst result"
+cutoff is realized). A retired lane stops mutating state, and in
+:func:`search_tiled` a tile whose lanes have all retired exits its loop
+immediately instead of spinning to whole-batch quiescence.
+
+For arbitrary query counts, :func:`search_tiled` streams B_tile-sized query
+tiles through ``lax.map`` so peak memory is O(B_tile * slots) regardless of
+the total batch size.
 """
 from __future__ import annotations
 
@@ -29,6 +71,197 @@ class SearchConfig:
     max_iters: int = 256     # hard bound on expansions (paper loops to quiescence)
     metric: str = "l2"
     topk: int = 1            # results returned per query
+    visited: str = "hashed"  # "hashed" (O(slots), n-independent) | "dense" (exact oracle)
+    slots: int | None = None  # hashed table size (power of two); None -> resolve_slots
+    probes: int = 8          # linear-probe attempts per hashed lookup/insert
+
+    def __post_init__(self):
+        assert self.topk <= self.l, "topk cannot exceed the beam width"
+        assert self.visited in ("hashed", "dense"), self.visited
+        assert self.probes >= 1
+        if self.slots is not None:
+            assert self.slots >= 8 and (self.slots & (self.slots - 1)) == 0, \
+                "slots must be a power of two >= 8"
+
+
+def _next_pow2(v: int) -> int:
+    return 1 << max(3, (v - 1).bit_length())
+
+
+def resolve_slots(cfg: SearchConfig, n_entry: int = 1) -> int:
+    """Hashed-table size: every visited vertex was either a seed or one of the
+    <= K neighbors of one of the <= max_iters expansions, so 2x that bound
+    keeps the load factor under 0.5 (open addressing stays near O(1))."""
+    if cfg.slots is not None:
+        return cfg.slots
+    return _next_pow2(2 * (cfg.l + n_entry + cfg.max_iters * cfg.k))
+
+
+def visited_state_bytes(cfg: SearchConfig, n: int, lanes: int, n_entry: int = 1) -> int:
+    """Peak visited-state bytes for ``lanes`` concurrent queries over a corpus
+    of ``n`` vectors. Dense scales with n; hashed does not."""
+    if cfg.visited == "dense":
+        return lanes * (n + 1)  # bool bitmask, one byte per element
+    return lanes * resolve_slots(cfg, n_entry) * 4
+
+
+# --------------------------------------------------------------- visited table
+def _probe_slots(ids: jnp.ndarray, slots: int, probes: int) -> jnp.ndarray:
+    """(..., C) ids -> (..., C, probes) table indices (Knuth multiplicative
+    hash + bit mix, linear probing; ``slots`` is a power of two)."""
+    h = ids.astype(jnp.uint32) * jnp.uint32(2654435761)
+    h = h ^ (h >> jnp.uint32(16))
+    probe = h[..., None] + jnp.arange(probes, dtype=jnp.uint32)
+    return (probe & jnp.uint32(slots - 1)).astype(jnp.int32)
+
+
+def _visited_lookup_insert(
+    table: jnp.ndarray, ids: jnp.ndarray, want: jnp.ndarray,
+    rows: jnp.ndarray, probes: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Membership test + insert for a (B, C) id batch against (B, slots).
+
+    Returns (seen, new_table). Only ``want`` lanes insert. No false
+    positives ever; insertions may be lost to probe overflow or same-slot
+    scatter races (safe: the vertex is just eligible for re-scoring)."""
+    slots = table.shape[1]
+    pidx = _probe_slots(ids, slots, probes)                       # (B, C, P)
+    vals = table[rows[:, None, None], pidx]                       # (B, C, P)
+    seen = jnp.any(vals == ids[..., None], axis=-1)               # (B, C)
+    empty = vals == -1
+    first_empty = jnp.argmax(empty, axis=-1)                      # (B, C)
+    ins_slot = jnp.take_along_axis(pidx, first_empty[..., None], axis=-1)[..., 0]
+    do_ins = want & ~seen & jnp.any(empty, axis=-1)
+    tgt = jnp.where(do_ins, ins_slot, slots)                      # OOB -> dropped
+    table = table.at[rows[:, None], tgt].set(ids, mode="drop")
+    return seen, table
+
+
+# ------------------------------------------------------------ entry validation
+def _validate_entry_points(entry_points, b: int, l: int) -> jnp.ndarray:
+    """Normalize ``entry_points`` to (B, E) int32.
+
+    Accepted: scalar (broadcast to every query), (B,) one seed per query,
+    (B, E) multi-entry seeding with E <= L. Anything else raises — the old
+    behaviour of silently truncating a wrong-length array to its first
+    element is gone."""
+    eps = jnp.asarray(entry_points)
+    if eps.ndim == 0:
+        return jnp.broadcast_to(eps.astype(jnp.int32).reshape(1, 1), (b, 1))
+    if eps.ndim == 1:
+        if eps.shape[0] != b:
+            raise ValueError(
+                f"entry_points has shape {eps.shape} but the query batch is {b}; "
+                "pass a scalar to broadcast, (B,) for one seed per query, or "
+                "(B, E) for multi-entry seeding")
+        return eps.astype(jnp.int32)[:, None]
+    if eps.ndim == 2:
+        if eps.shape[0] != b:
+            raise ValueError(
+                f"entry_points batch dim {eps.shape[0]} != query batch {b}")
+        if eps.shape[1] > l:
+            raise ValueError(
+                f"{eps.shape[1]} entry points exceed the beam width L={l}")
+        return eps.astype(jnp.int32)
+    raise ValueError(f"entry_points must be scalar, (B,) or (B, E); got ndim={eps.ndim}")
+
+
+# -------------------------------------------------------------------- core
+def _search_impl(
+    x: jnp.ndarray,
+    g: G.Graph,
+    queries: jnp.ndarray,
+    eps: jnp.ndarray,            # (B, E) validated
+    cfg: SearchConfig,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    n = x.shape[0]
+    b = queries.shape[0]
+    e = eps.shape[1]
+    k = min(cfg.k, g.capacity)
+    rows = jnp.arange(b)
+    dense = cfg.visited == "dense"
+    slots = resolve_slots(cfg, e)
+
+    # --- seed the beam with E entries (duplicate seeds within a lane inert)
+    dup = jnp.any(
+        (eps[:, :, None] == eps[:, None, :])
+        & (jnp.arange(e)[None, :, None] > jnp.arange(e)[None, None, :]),
+        axis=-1,
+    )
+    ep_d = jax.vmap(lambda q, vs: D.point_to_points(q, vs, cfg.metric))(queries, x[eps])
+    seed_ids = jnp.where(dup, -1, eps)
+    seed_d = jnp.where(dup, jnp.inf, ep_d)
+
+    beam_ids = jnp.full((b, cfg.l), -1, jnp.int32).at[:, :e].set(seed_ids)
+    beam_d = jnp.full((b, cfg.l), jnp.inf).at[:, :e].set(seed_d)
+    expanded = jnp.ones((b, cfg.l), bool).at[:, :e].set(dup)
+    neg_d, order = jax.lax.top_k(-beam_d, cfg.l)                  # sort the seeds
+    beam_d = -neg_d
+    beam_ids = jnp.take_along_axis(beam_ids, order, axis=1)
+    expanded = jnp.take_along_axis(expanded, order, axis=1)
+
+    if dense:
+        visited = jnp.zeros((b, n + 1), bool)
+        visited = visited.at[rows[:, None], jnp.where(dup, n, eps)].set(True)
+    else:
+        visited = jnp.full((b, slots), -1, jnp.int32)
+        _, visited = _visited_lookup_insert(visited, eps, ~dup, rows, cfg.probes)
+
+    done = jnp.zeros((b,), bool)
+
+    def cond(state):
+        _, _, _, _, done, it = state
+        return jnp.logical_and(it < cfg.max_iters, jnp.any(~done))
+
+    def body(state):
+        beam_ids, beam_d, expanded, visited, done, it = state
+        frontier = jnp.where(expanded, jnp.inf, beam_d)
+        slot = jnp.argmin(frontier, axis=1)                       # (B,)
+        best_unexp = frontier[rows, slot]
+        # per-lane retirement: nothing unexpanded can displace a beam entry.
+        # In-beam candidates always satisfy best_unexp <= beam_d[:, -1] (merge
+        # already evicted anything worse), so the operative trigger is an
+        # exhausted frontier; retired lanes stop mutating state and let their
+        # tile's while_loop exit without waiting on other tiles.
+        done = done | (best_unexp > beam_d[:, -1]) | ~jnp.isfinite(best_unexp)
+        active = ~done
+        u = jnp.where(active, beam_ids[rows, slot], 0)
+        expanded = expanded.at[rows, slot].max(active)
+
+        nbrs = g.neighbors[u][:, :k]                              # Eq. 4 prefix slice
+        valid = (nbrs >= 0) & active[:, None]
+        if dense:
+            seen = visited[rows[:, None], jnp.maximum(nbrs, 0)]
+            fresh = valid & ~seen
+            ins_idx = jnp.where(fresh, nbrs, n)                   # n = scratch slot
+            visited = visited.at[rows[:, None], ins_idx].set(True)
+        else:
+            # exact candidate-vs-beam dedup backs up the lossy hash table:
+            # a lost insertion can cost a re-score, never a duplicate result
+            in_beam = jnp.any(nbrs[:, :, None] == beam_ids[:, None, :], axis=-1)
+            seen, visited = _visited_lookup_insert(
+                visited, nbrs, valid & ~in_beam, rows, cfg.probes)
+            fresh = valid & ~seen & ~in_beam
+
+        nd = jax.vmap(lambda q, vs: D.point_to_points(q, vs, cfg.metric))(
+            queries, x[jnp.maximum(nbrs, 0)]
+        )
+        nd = jnp.where(fresh, nd, jnp.inf)
+
+        all_d = jnp.concatenate([beam_d, nd], axis=1)
+        all_ids = jnp.concatenate([beam_ids, jnp.where(fresh, nbrs, -1)], axis=1)
+        all_exp = jnp.concatenate([expanded, ~fresh], axis=1)
+        neg_d, order = jax.lax.top_k(-all_d, cfg.l)               # L smallest
+        beam_d = -neg_d
+        beam_ids = jnp.take_along_axis(all_ids, order, axis=1)
+        expanded = jnp.take_along_axis(all_exp, order, axis=1)
+        return beam_ids, beam_d, expanded, visited, done, it + 1
+
+    state = (beam_ids, beam_d, expanded, visited, done, jnp.int32(0))
+    beam_ids, beam_d, _, _, _, _ = jax.lax.while_loop(cond, body, state)
+    # beam rows are top_k-sorted ascending and duplicate-free by construction,
+    # so the topk prefix is sorted-valid for any topk <= L
+    return beam_ids[:, : cfg.topk], beam_d[:, : cfg.topk]
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -39,59 +272,64 @@ def search(
     entry_points: jnp.ndarray,
     cfg: SearchConfig,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (ids, dists) of shape (B, topk), ascending distance."""
-    n = x.shape[0]
+    """Returns (ids, dists) of shape (B, topk), ascending distance.
+
+    ``entry_points``: scalar | (B,) | (B, E) — see :func:`_validate_entry_points`.
+    """
+    eps = _validate_entry_points(entry_points, queries.shape[0], cfg.l)
+    return _search_impl(x, g, queries, eps, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "tile_b"))
+def search_tiled(
+    x: jnp.ndarray,
+    g: G.Graph,
+    queries: jnp.ndarray,
+    entry_points: jnp.ndarray,
+    cfg: SearchConfig,
+    tile_b: int = 256,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Stream an arbitrary query count through B_tile-sized ``lax.map`` tiles.
+
+    Only one tile's search state is alive at a time, so peak visited-state
+    memory is O(tile_b * slots) — independent of both the total batch size
+    and (in hashed mode) the corpus size. Results match :func:`search`
+    exactly; lanes in a finished tile never block lanes in another tile.
+    """
     b = queries.shape[0]
-    k = min(cfg.k, g.capacity)
-    rows = jnp.arange(b)
-
-    eps = jnp.broadcast_to(entry_points.reshape(-1)[:1], (b,)) if entry_points.ndim == 0 else entry_points
-    if eps.shape[0] != b:
-        eps = jnp.broadcast_to(eps[:1], (b,))
-    ep_d = jax.vmap(lambda q, e: D.point_to_points(q, x[e][None, :], cfg.metric)[0])(queries, eps)
-
-    beam_ids = jnp.full((b, cfg.l), -1, jnp.int32).at[:, 0].set(eps)
-    beam_d = jnp.full((b, cfg.l), jnp.inf).at[:, 0].set(ep_d)
-    expanded = jnp.ones((b, cfg.l), bool).at[:, 0].set(False)
-    inserted = jnp.zeros((b, n + 1), bool).at[rows, eps].set(True)
-
-    def cond(state):
-        _, _, expanded, _, it = state
-        return jnp.logical_and(it < cfg.max_iters, jnp.any(~expanded))
-
-    def body(state):
-        beam_ids, beam_d, expanded, inserted, it = state
-        frontier = jnp.where(expanded, jnp.inf, beam_d)
-        slot = jnp.argmin(frontier, axis=1)                       # (B,)
-        has_work = jnp.isfinite(frontier[rows, slot])
-        u = jnp.where(has_work, beam_ids[rows, slot], 0)
-        expanded = expanded.at[rows, slot].set(True)
-
-        nbrs = g.neighbors[u][:, :k]                              # Eq. 4 prefix slice
-        fresh = (nbrs >= 0) & ~inserted[rows[:, None], jnp.maximum(nbrs, 0)]
-        fresh &= has_work[:, None]
-        nd = jax.vmap(lambda q, vs: D.point_to_points(q, vs, cfg.metric))(
-            queries, x[jnp.maximum(nbrs, 0)]
-        )
-        nd = jnp.where(fresh, nd, jnp.inf)
-        ins_idx = jnp.where(fresh, nbrs, n)                       # n = scratch slot
-        inserted = inserted.at[rows[:, None], ins_idx].set(True)
-
-        all_d = jnp.concatenate([beam_d, nd], axis=1)
-        all_ids = jnp.concatenate([beam_ids, jnp.where(fresh, nbrs, -1)], axis=1)
-        all_exp = jnp.concatenate([expanded, ~fresh], axis=1)
-        neg_d, order = jax.lax.top_k(-all_d, cfg.l)               # L smallest
-        beam_d = -neg_d
-        beam_ids = jnp.take_along_axis(all_ids, order, axis=1)
-        expanded = jnp.take_along_axis(all_exp, order, axis=1)
-        return beam_ids, beam_d, expanded, inserted, it + 1
-
-    state = (beam_ids, beam_d, expanded, inserted, jnp.int32(0))
-    beam_ids, beam_d, _, _, iters = jax.lax.while_loop(cond, body, state)
-    return beam_ids[:, : cfg.topk], beam_d[:, : cfg.topk]
+    eps = _validate_entry_points(entry_points, b, cfg.l)
+    tile_b = min(tile_b, b) if b > 0 else 1   # b=0 -> zero tiles, empty result
+    pad = (-b) % tile_b
+    q_p = jnp.pad(queries, ((0, pad), (0, 0)))
+    eps_p = jnp.concatenate([eps, jnp.broadcast_to(eps[:1], (pad, eps.shape[1]))]) \
+        if pad else eps
+    q_tiles = q_p.reshape(-1, tile_b, queries.shape[1])
+    ep_tiles = eps_p.reshape(-1, tile_b, eps.shape[1])
+    ids, dists = jax.lax.map(
+        lambda t: _search_impl(x, g, t[0], t[1], cfg), (q_tiles, ep_tiles)
+    )
+    return ids.reshape(-1, cfg.topk)[:b], dists.reshape(-1, cfg.topk)[:b]
 
 
 def default_entry_point(x: jnp.ndarray, metric: str = "l2") -> jnp.ndarray:
     """NSG-style navigating node: the vertex nearest the dataset centroid."""
     c = jnp.mean(x, axis=0)
     return jnp.argmin(D.point_to_points(c, x, metric)).astype(jnp.int32)
+
+
+def default_entry_points(
+    x: jnp.ndarray, n_entries: int = 1, metric: str = "l2",
+    key: jax.Array | None = None,
+) -> jnp.ndarray:
+    """(E,) seed set: the centroid-nearest vertex plus ``n_entries - 1``
+    distinct random vertices (diversified seeding for multi-entry search).
+    Broadcast to (B, E) to share across a query batch."""
+    center = default_entry_point(x, metric)
+    if n_entries <= 1:
+        return center[None]
+    key = jax.random.PRNGKey(0) if key is None else key
+    # sample from [0, n-1) and shift indices >= center up by one: distinct
+    # from each other (choice without replacement) and never equal to center
+    extra = jax.random.choice(key, x.shape[0] - 1, (n_entries - 1,), replace=False)
+    extra = (extra + (extra >= center)).astype(jnp.int32)
+    return jnp.concatenate([center[None], extra])

@@ -1,3 +1,16 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared kernel-dispatch helpers used by every kernel package."""
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas interpret-mode default shared by all kernel packages.
+
+    Interpret mode is required on CPU (no Mosaic lowering) but must be OFF on
+    real accelerators — the old hardcoded ``interpret=True`` silently ran
+    every ``use_pallas=True`` build through the interpreter even on TPU.
+    Callers can still force either mode with an explicit ``interpret=`` arg.
+    """
+    return jax.default_backend() == "cpu"

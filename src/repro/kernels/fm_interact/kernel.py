@@ -25,9 +25,12 @@ def _fm_body(emb_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
 def fm_interact_tiles(
-    emb: jnp.ndarray, tile_b: int = 512, interpret: bool = True
+    emb: jnp.ndarray, tile_b: int = 512, interpret: bool | None = None
 ) -> jnp.ndarray:
     """(b, F, D) -> (b, 1); b must be a tile multiple (ops.py pads)."""
+    if interpret is None:
+        from repro.kernels import default_interpret
+        interpret = default_interpret()
     b, f, d = emb.shape
     assert b % tile_b == 0
     return pl.pallas_call(

@@ -6,13 +6,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.fm_interact.kernel import fm_interact_tiles
 from repro.kernels.fm_interact.ref import fm_interact_ref
 
 
 @functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
-def fm_interact(emb: jnp.ndarray, tile_b: int = 512, interpret: bool = True) -> jnp.ndarray:
+def fm_interact(emb: jnp.ndarray, tile_b: int = 512, interpret: bool | None = None) -> jnp.ndarray:
     """(b, F, D) field embeddings -> (b,) FM second-order logit."""
+    if interpret is None:
+        interpret = default_interpret()
     b = emb.shape[0]
     tile_b = min(tile_b, b) if b > 0 else tile_b
     pad = (-b) % tile_b

@@ -34,9 +34,12 @@ def _pairwise_l2_body(a_ref, b_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "interpret"))
 def pairwise_l2_tiles(
     a: jnp.ndarray, b: jnp.ndarray,
-    tile_m: int = 256, tile_n: int = 256, interpret: bool = True,
+    tile_m: int = 256, tile_n: int = 256, interpret: bool | None = None,
 ) -> jnp.ndarray:
     """(na, d) x (nb, d) -> (na, nb); na/nb must be tile multiples (ops.py pads)."""
+    if interpret is None:
+        from repro.kernels import default_interpret
+        interpret = default_interpret()
     na, d = a.shape
     nb = b.shape[0]
     assert na % tile_m == 0 and nb % tile_n == 0

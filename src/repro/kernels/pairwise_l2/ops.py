@@ -1,7 +1,7 @@
 """Jit'd public wrapper: pads to tile multiples, dispatches kernel vs ref.
 
-``interpret=True`` everywhere in this container (CPU); on a real TPU the same
-call sites flip ``interpret=False``.
+``interpret`` defaults via :func:`repro.kernels.default_interpret`: interpreted
+on CPU, compiled (Mosaic) on real accelerators.
 """
 from __future__ import annotations
 
@@ -10,6 +10,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.pairwise_l2.kernel import pairwise_l2_tiles
 from repro.kernels.pairwise_l2.ref import pairwise_l2_ref
 
@@ -17,8 +18,10 @@ from repro.kernels.pairwise_l2.ref import pairwise_l2_ref
 @functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "interpret"))
 def pairwise_l2(
     a: jnp.ndarray, b: jnp.ndarray,
-    tile_m: int = 256, tile_n: int = 256, interpret: bool = True,
+    tile_m: int = 256, tile_n: int = 256, interpret: bool | None = None,
 ) -> jnp.ndarray:
+    if interpret is None:
+        interpret = default_interpret()
     na, nb = a.shape[0], b.shape[0]
     pad_m = (-na) % tile_m
     pad_n = (-nb) % tile_n

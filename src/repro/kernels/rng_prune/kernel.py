@@ -65,9 +65,12 @@ def _rng_prune_body(ids_ref, dists_ref, flags_ref, vecs_ref, keep_ref, redw_ref,
 @functools.partial(jax.jit, static_argnames=("tile_c", "interpret"))
 def rng_prune_tiles(
     ids: jnp.ndarray, dists: jnp.ndarray, flags: jnp.ndarray, vecs: jnp.ndarray,
-    tile_c: int = 8, interpret: bool = True,
+    tile_c: int = 8, interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """ids/dists/flags (n, M) + gathered vecs (n, M, d) -> keep/red_w/red_d."""
+    if interpret is None:
+        from repro.kernels import default_interpret
+        interpret = default_interpret()
     n, m = ids.shape
     d = vecs.shape[-1]
     assert n % tile_c == 0

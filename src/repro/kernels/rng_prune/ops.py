@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.rng_prune.kernel import rng_prune_tiles
 from repro.kernels.rng_prune.ref import rng_prune_ref
 
@@ -17,12 +18,14 @@ def rng_prune(
     dists: jnp.ndarray,
     flags: jnp.ndarray | None = None,
     tile_c: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Returns (keep bool, redirect_w int32, redirect_d f32), shapes (n, M).
 
     ``flags=None`` means plain Algorithm 3 (everything "new" -> no exemption).
     """
+    if interpret is None:
+        interpret = default_interpret()
     n, m = ids.shape
     if flags is None:
         flags = jnp.ones((n, m), jnp.uint8)

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # degrades to skip without hypothesis
 
 from repro.kernels.fm_interact import fm_interact, fm_interact_ref
 from repro.kernels.pairwise_l2 import pairwise_l2, pairwise_l2_ref

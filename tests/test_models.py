@@ -148,11 +148,14 @@ def test_embedding_bag_fixed_equals_ragged():
     fixed = rs.embedding_bag(table, ids)
     ragged = rs.embedding_bag_ragged(
         table, ids.reshape(-1), jnp.repeat(jnp.arange(6), 3), n_bags=6)
-    np.testing.assert_allclose(np.asarray(fixed), np.asarray(ragged), rtol=1e-6)
+    # fp32 sum vs segment_sum accumulate in different orders -> ~1 ulp noise
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(ragged),
+                               rtol=1e-5, atol=1e-6)
     fixed_m = rs.embedding_bag(table, ids, mode="mean")
     ragged_m = rs.embedding_bag_ragged(
         table, ids.reshape(-1), jnp.repeat(jnp.arange(6), 3), n_bags=6, mode="mean")
-    np.testing.assert_allclose(np.asarray(fixed_m), np.asarray(ragged_m), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(fixed_m), np.asarray(ragged_m),
+                               rtol=1e-5, atol=1e-6)
 
 
 def test_cin_matches_reference():

@@ -1,7 +1,7 @@
 """The vectorized triangular RNG scan vs. a literal Algorithm-3/4 oracle."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # degrades to skip without hypothesis
 
 from repro.core import distances as D
 from repro.core.rng import rng_scan

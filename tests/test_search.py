@@ -1,0 +1,182 @@
+"""Serving-path tests: hashed-visited beam search vs the dense-bitmask oracle,
+the tiled driver, entry-point validation, and the visited-memory contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import eval as E
+from repro.core import rnn_descent as rd
+from repro.core import search as S
+
+
+BUILD_CFG = dict(s=6, r=12, t1=2, t2=3, capacity=16, chunk=128)
+
+
+def _corpus(metric="l2", seed=0, n=400, d=24, nq=24):
+    key = jax.random.PRNGKey(seed)
+    kx, kq = jax.random.split(key)
+    x = jax.random.normal(kx, (n, d), jnp.float32)
+    q = jax.random.normal(kq, (nq, d), jnp.float32)
+    g = rd.build(x, rd.RNNDescentConfig(metric=metric, **BUILD_CFG),
+                 jax.random.PRNGKey(seed + 1))
+    return x, q, g
+
+
+# ------------------------------------------------- hashed vs dense equivalence
+@pytest.mark.parametrize("metric", ["l2", "ip", "cos"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_hashed_matches_dense_oracle(metric, seed):
+    """With a generous iteration budget the hashed table's only failure mode
+    (lost insertions -> re-scoring) cannot change the converged beam, so
+    results must match the exact dense bitmask bit-for-bit."""
+    x, q, g = _corpus(metric=metric, seed=seed)
+    ep = S.default_entry_point(x, metric)
+    base = dict(l=16, k=12, max_iters=128, metric=metric, topk=5)
+    ids_h, d_h = S.search(x, g, q, ep, S.SearchConfig(visited="hashed", **base))
+    ids_d, d_d = S.search(x, g, q, ep, S.SearchConfig(visited="dense", **base))
+    np.testing.assert_array_equal(np.asarray(ids_h), np.asarray(ids_d))
+    np.testing.assert_allclose(np.asarray(d_h), np.asarray(d_d), rtol=1e-6)
+
+
+def test_hashed_tiny_table_still_sorted_unique():
+    """Even a deliberately undersized table (lots of lost insertions) must
+    yield sorted, duplicate-free, valid top-k results."""
+    x, q, g = _corpus()
+    ep = S.default_entry_point(x)
+    cfg = S.SearchConfig(l=16, k=12, max_iters=128, topk=8, slots=32, probes=2)
+    ids, dists = S.search(x, g, q, ep, cfg)
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    assert (ids >= 0).all()
+    assert (np.diff(dists, axis=1) >= 0).all()
+    for row in ids:
+        assert len(set(row.tolist())) == len(row)
+
+
+# ------------------------------------------------------------- tiled driver
+def test_search_tiled_matches_search():
+    x, q, g = _corpus(nq=50)
+    ep = S.default_entry_point(x)
+    cfg = S.SearchConfig(l=16, k=12, max_iters=128, topk=4)
+    ids_full, d_full = S.search(x, g, q, ep, cfg)
+    for tile_b in (16, 50, 64):  # padded, exact, oversized
+        ids_t, d_t = S.search_tiled(x, g, q, ep, cfg, tile_b=tile_b)
+        np.testing.assert_array_equal(np.asarray(ids_t), np.asarray(ids_full))
+        np.testing.assert_allclose(np.asarray(d_t), np.asarray(d_full), rtol=1e-6)
+
+
+def test_tiled_recall_close_to_oracle(small_dataset):
+    """Acceptance: hashed recall@1 within 0.01 of the dense oracle at equal L."""
+    x, q, gt = small_dataset
+    g = rd.build(x, rd.RNNDescentConfig(s=8, r=24, t1=3, t2=4, capacity=32,
+                                        chunk=256), jax.random.PRNGKey(1))
+    ep = S.default_entry_point(x)
+    base = dict(l=32, k=24, max_iters=128)
+    r_h = E.recall_at_k(S.search_tiled(
+        x, g, q, ep, S.SearchConfig(visited="hashed", **base), tile_b=32)[0], gt)
+    r_d = E.recall_at_k(S.search(
+        x, g, q, ep, S.SearchConfig(visited="dense", **base))[0], gt)
+    assert abs(r_h - r_d) <= 0.01
+
+
+# ------------------------------------------------------ entry-point handling
+def test_entry_point_validation():
+    x, q, g = _corpus(nq=8)
+    cfg = S.SearchConfig(l=8, k=8, max_iters=32)
+    with pytest.raises(ValueError):  # wrong-length 1-D: used to truncate silently
+        S.search(x, g, q, jnp.zeros((5,), jnp.int32), cfg)
+    with pytest.raises(ValueError):  # batch mismatch on 2-D
+        S.search(x, g, q, jnp.zeros((5, 2), jnp.int32), cfg)
+    with pytest.raises(ValueError):  # more seeds than beam slots
+        S.search(x, g, q, jnp.zeros((8, 9), jnp.int32), cfg)
+    with pytest.raises(ValueError):  # bogus rank
+        S.search(x, g, q, jnp.zeros((8, 2, 2), jnp.int32), cfg)
+    # accepted forms: scalar, (B,), (B, E)
+    for ep in (jnp.int32(0), jnp.zeros((8,), jnp.int32), jnp.zeros((8, 4), jnp.int32)):
+        ids, _ = S.search(x, g, q, ep, cfg)
+        assert ids.shape == (8, 1)
+
+
+def test_empty_query_batch():
+    x, _, g = _corpus(nq=8)
+    q0 = jnp.zeros((0, x.shape[1]), jnp.float32)
+    cfg = S.SearchConfig(l=8, k=8, max_iters=16, topk=2)
+    ids, dists = S.search_tiled(x, g, q0, jnp.int32(0), cfg, tile_b=64)
+    assert ids.shape == (0, 2) and dists.shape == (0, 2)
+
+
+def test_default_entry_points_distinct():
+    x = jax.random.normal(jax.random.PRNGKey(0), (50, 8))
+    for seed in range(5):
+        eps = np.asarray(S.default_entry_points(
+            x, n_entries=8, key=jax.random.PRNGKey(seed)))
+        assert len(set(eps.tolist())) == 8, eps
+
+
+def test_multi_entry_seeding():
+    x, q, g = _corpus(nq=16)
+    eps = S.default_entry_points(x, n_entries=4)
+    assert eps.shape == (4,)
+    eps_b = jnp.broadcast_to(eps[None, :], (16, 4))
+    cfg = S.SearchConfig(l=16, k=12, max_iters=96, topk=4)
+    ids, dists = S.search(x, g, q, eps_b, cfg)
+    assert ids.shape == (16, 4)
+    ids = np.asarray(ids)
+    for row in ids:
+        assert len(set(row.tolist())) == len(row)
+    # duplicate seeds in a lane are inert, not duplicated results
+    dup = jnp.zeros((16, 4), jnp.int32)
+    ids2, _ = S.search(x, g, q, dup, cfg)
+    for row in np.asarray(ids2):
+        assert len(set(row.tolist())) == len(row)
+
+
+def test_multi_entry_not_worse_than_single(small_dataset):
+    x, q, gt = small_dataset
+    g = rd.build(x, rd.RNNDescentConfig(s=8, r=24, t1=3, t2=4, capacity=32,
+                                        chunk=256), jax.random.PRNGKey(1))
+    cfg = S.SearchConfig(l=32, k=24, max_iters=128)
+    ep1 = S.default_entry_point(x)
+    eps = jnp.broadcast_to(S.default_entry_points(x, 4)[None, :], (q.shape[0], 4))
+    r1 = E.recall_at_k(S.search(x, g, q, ep1, cfg)[0], gt)
+    r4 = E.recall_at_k(S.search(x, g, q, eps, cfg)[0], gt)
+    assert r4 >= r1 - 0.02
+
+
+# --------------------------------------------------------- memory contract
+def test_visited_bytes_independent_of_n():
+    cfg = S.SearchConfig(l=32, k=16, max_iters=64)
+    assert S.visited_state_bytes(cfg, n=1_000, lanes=256) == \
+        S.visited_state_bytes(cfg, n=100_000_000, lanes=256)
+    dense = S.SearchConfig(l=32, k=16, max_iters=64, visited="dense")
+    assert S.visited_state_bytes(dense, n=200_000, lanes=256) > \
+        S.visited_state_bytes(dense, n=1_000, lanes=256)
+
+
+def test_resolve_slots_power_of_two():
+    for l, k, it in [(8, 8, 16), (64, 32, 256), (128, 64, 512)]:
+        slots = S.resolve_slots(S.SearchConfig(l=l, k=k, max_iters=it))
+        assert slots & (slots - 1) == 0
+        assert slots >= l + it * k  # holds every possible visited vertex
+    assert S.resolve_slots(S.SearchConfig(slots=1024)) == 1024
+
+
+def test_config_validation():
+    with pytest.raises(AssertionError):
+        S.SearchConfig(l=8, topk=9)
+    with pytest.raises(AssertionError):
+        S.SearchConfig(visited="bloom")
+    with pytest.raises(AssertionError):
+        S.SearchConfig(slots=1000)  # not a power of two
+
+
+# ------------------------------------------------------- build regression
+def test_build_jit_matches_build_second_seed():
+    """build() vs build_jit() regression on a fresh seed/config (the serving
+    path assumes either build produces the identical graph)."""
+    x = jax.random.normal(jax.random.PRNGKey(11), (256, 16), jnp.float32)
+    cfg = rd.RNNDescentConfig(s=5, r=10, t1=2, t2=2, capacity=12, chunk=64)
+    g_eager = rd.build(x, cfg, jax.random.PRNGKey(12))
+    g_scan = rd.build_jit(x, cfg, jax.random.PRNGKey(12))
+    np.testing.assert_array_equal(np.asarray(g_eager.neighbors),
+                                  np.asarray(g_scan.neighbors))

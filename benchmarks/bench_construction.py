@@ -1,27 +1,89 @@
 """Paper Figure 3: index construction time per method per dataset.
 
 Claim validated: RNN-Descent builds faster than NSG-style refinement AND
-faster than bare NN-Descent (the paper's headline result)."""
+faster than bare NN-Descent (the paper's headline result).
+
+Additionally times the rnn-descent build under both edge-merge paths
+(``merge="bucketed"`` scatter default vs the ``merge="sort"`` lexsort oracle)
+and a per-sweep breakdown (one warmed ``update_neighbors`` +
+``add_reverse_edges`` call per mode), and records everything in the repo-root
+``BENCH_construction.json`` so the construction-speed trajectory is
+machine-comparable across PRs."""
 from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
 
 from benchmarks import common
 
 
+def _timed(fn, *args):
+    """Seconds for one warmed call."""
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return time.perf_counter() - t0
+
+
+def _sweep_breakdown(x, cfg) -> dict:
+    """Per-phase seconds for one rnn-descent sweep under ``cfg.merge``."""
+    from repro.core import rnn_descent as rd
+
+    g = rd.random_init(jax.random.PRNGKey(2), x, cfg)
+    upd = _timed(lambda: rd.update_neighbors(x, g, cfg))
+    rev = _timed(lambda: rd.add_reverse_edges(g, cfg))
+    return {
+        "update_neighbors_s": round(upd, 4),
+        "add_reverse_edges_s": round(rev, 4),
+        "sweeps_total": cfg.t1 * cfg.t2,
+    }
+
+
 def run() -> list[dict]:
+    from repro.core import graph as G
+
     rows = []
+    breakdown: dict[str, dict] = {}
     for ds in common.DATASETS:
         x, q, gt = common.dataset(ds)
         for method in ("rnn-descent", "nn-descent", "nsg-style"):
             sec, g = common.build_timed(method, x)
-            from repro.core import graph as G
             rows.append({
                 "bench": "construction",
                 "dataset": ds,
                 "method": method,
+                "merge": "bucketed",
                 "seconds": round(sec, 3),
                 "aod": round(float(G.average_out_degree(g)), 2),
             })
-            common.emit(f"construction/{ds}/{method}", sec * 1e6,
+            common.emit(f"construction/{ds}/{method}[bucketed]", sec * 1e6,
                         f"aod={rows[-1]['aod']}")
+        # sort-oracle rnn-descent: the pre-optimization merge path
+        sort_cfg = dataclasses.replace(common.RNND_CFG, merge="sort")
+        sec, g = common.build_timed("rnn-descent", x, cfg=sort_cfg)
+        rows.append({
+            "bench": "construction",
+            "dataset": ds,
+            "method": "rnn-descent",
+            "merge": "sort",
+            "seconds": round(sec, 3),
+            "aod": round(float(G.average_out_degree(g)), 2),
+        })
+        common.emit(f"construction/{ds}/rnn-descent[sort]", sec * 1e6,
+                    f"aod={rows[-1]['aod']}")
+        breakdown[ds] = {
+            "bucketed": _sweep_breakdown(x, common.RNND_CFG),
+            "sort": _sweep_breakdown(x, sort_cfg),
+        }
+    payload = {
+        "bench": "construction",
+        "merge_default": "bucketed",
+        "smoke": common.BENCH_SMOKE,
+        "rows": rows,
+        "sweep_breakdown": breakdown,
+    }
     common.save_json("bench_construction", rows)
+    common.save_root_json("BENCH_construction.json", payload)
     return rows

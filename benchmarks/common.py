@@ -25,24 +25,38 @@ from repro.core import search as S
 from repro.data.synthetic import VectorDatasetSpec, clustered_vectors
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+ROOT_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# BENCH_SMOKE=1 shrinks everything so a benchmark runs as a CI smoke step
+# (merge-path regressions fail in CI, not in the next PR's bench run).
+BENCH_SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
 
 # CPU-feasible stand-ins for the paper's Table 1 (dims preserved)
-DATASETS = {
-    "sift-like": VectorDatasetSpec("sift-like", n=6000, d=128, n_queries=400,
-                                   n_clusters=48),
-    "gist-like": VectorDatasetSpec("gist-like", n=2000, d=960, n_queries=200,
-                                   n_clusters=32),
-    "deep-like": VectorDatasetSpec("deep-like", n=6000, d=96, n_queries=400,
-                                   n_clusters=48),
-}
-
-# paper §5.1 parameters, scaled to corpus size (paper: S=20 R=96 T1=4 T2=15
-# at n=1M; the R/S scale-down keeps R ~ sqrt-ish of n so degree caps bind the
-# same way)
-RNND_CFG = rd.RNNDescentConfig(s=12, r=48, t1=4, t2=6, capacity=64, chunk=512)
-NND_CFG = nnd.NNDescentConfig(k=32, s=12, iters=8, chunk=256)
-NSG_CFG = nsg_style.NSGStyleConfig(r=24, c=64, knn=nnd.NNDescentConfig(
-    k=32, s=12, iters=8, chunk=256))
+if BENCH_SMOKE:
+    DATASETS = {
+        "smoke": VectorDatasetSpec("smoke", n=1200, d=48, n_queries=100,
+                                   n_clusters=16),
+    }
+    RNND_CFG = rd.RNNDescentConfig(s=8, r=24, t1=2, t2=3, capacity=32, chunk=256)
+    NND_CFG = nnd.NNDescentConfig(k=16, s=8, iters=4, chunk=256)
+    NSG_CFG = nsg_style.NSGStyleConfig(r=12, c=32, knn=nnd.NNDescentConfig(
+        k=16, s=8, iters=4, chunk=256))
+else:
+    DATASETS = {
+        "sift-like": VectorDatasetSpec("sift-like", n=6000, d=128, n_queries=400,
+                                       n_clusters=48),
+        "gist-like": VectorDatasetSpec("gist-like", n=2000, d=960, n_queries=200,
+                                       n_clusters=32),
+        "deep-like": VectorDatasetSpec("deep-like", n=6000, d=96, n_queries=400,
+                                       n_clusters=48),
+    }
+    # paper §5.1 parameters, scaled to corpus size (paper: S=20 R=96 T1=4 T2=15
+    # at n=1M; the R/S scale-down keeps R ~ sqrt-ish of n so degree caps bind
+    # the same way)
+    RNND_CFG = rd.RNNDescentConfig(s=12, r=48, t1=4, t2=6, capacity=64, chunk=512)
+    NND_CFG = nnd.NNDescentConfig(k=32, s=12, iters=8, chunk=256)
+    NSG_CFG = nsg_style.NSGStyleConfig(r=24, c=64, knn=nnd.NNDescentConfig(
+        k=32, s=12, iters=8, chunk=256))
 SEARCH_L_SWEEP = (8, 16, 32, 64, 128)
 
 
@@ -52,16 +66,23 @@ def dataset(name: str, key=0):
     return x, q, gt
 
 
-def build_timed(builder: str, x, key=1):
-    """Returns (seconds, graph). Compile excluded via a warmup on a slice."""
+def build_timed(builder: str, x, key=1, cfg=None):
+    """Returns (seconds, graph). ``cfg`` overrides the default per-builder
+    config (e.g. to time the ``merge="sort"`` oracle against the bucketed
+    default).
+
+    The warmup runs on the *full* corpus: jit caches are per-shape, so the old
+    smaller-slice warmup left the timed call paying full compilation — which
+    dwarfs the merge-path runtime difference the construction benchmark
+    exists to measure."""
     k = jax.random.PRNGKey(key)
     fns = {
-        "rnn-descent": lambda xx: rd.build(xx, RNND_CFG, k),
-        "nn-descent": lambda xx: nnd.build(xx, NND_CFG, k),
-        "nsg-style": lambda xx: nsg_style.build(xx, NSG_CFG, k),
+        "rnn-descent": lambda xx: rd.build(xx, cfg or RNND_CFG, k),
+        "nn-descent": lambda xx: nnd.build(xx, cfg or NND_CFG, k),
+        "nsg-style": lambda xx: nsg_style.build(xx, cfg or NSG_CFG, k),
     }
     fn = fns[builder]
-    jax.block_until_ready(fn(x[: max(512, x.shape[0] // 4)]))   # warm compile
+    jax.block_until_ready(fn(x))   # warm compile at the timed shapes
     t0 = time.perf_counter()
     g = jax.block_until_ready(fn(x))
     return time.perf_counter() - t0, g
@@ -102,3 +123,11 @@ def save_json(name: str, payload) -> None:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
         json.dump(payload, f, indent=1, default=str)
+
+
+def save_root_json(filename: str, payload) -> None:
+    """Write a trajectory file at the repo root (committed, machine-comparable
+    across PRs — unlike benchmarks/results/, which is per-run scratch)."""
+    with open(os.path.join(ROOT_DIR, filename), "w") as f:
+        json.dump(payload, f, indent=1, default=str, sort_keys=True)
+        f.write("\n")

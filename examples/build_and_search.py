@@ -23,9 +23,16 @@ _, gt = E.ground_truth(x, q, k=1)
 entry = S.default_entry_point(x)
 scfg = S.SearchConfig(l=48, k=32, max_iters=128)
 
+# every builder defaults to merge="bucketed" (scatter-bucketed edge merging,
+# the construction hot-loop optimization); pass merge="sort" to any config to
+# time the exact lexsort oracle instead
 builders = {
     "rnn-descent": lambda: rd.build(
         x, rd.RNNDescentConfig(s=12, r=48, t1=4, t2=6, capacity=64),
+        jax.random.PRNGKey(1)),
+    "rnn-descent[sort-oracle]": lambda: rd.build(
+        x, rd.RNNDescentConfig(s=12, r=48, t1=4, t2=6, capacity=64,
+                               merge="sort"),
         jax.random.PRNGKey(1)),
     "nn-descent": lambda: nnd.build(
         x, nnd.NNDescentConfig(k=32, s=12, iters=8), jax.random.PRNGKey(1)),
@@ -41,7 +48,7 @@ for name, build in builders.items():
     g = jax.block_until_ready(build())
     sec = time.perf_counter() - t0
     stats = E.evaluate_search(x, g, q, gt, scfg, entry_points=entry, tile_b=128)
-    print(f"{name:12s} build {sec:6.2f}s  recall@1 {stats['recall_at_1']:.4f}  "
+    print(f"{name:24s} build {sec:6.2f}s  recall@1 {stats['recall_at_1']:.4f}  "
           f"qps {stats['qps']:8.1f}  "
           f"visited/tile {stats['visited_bytes_per_tile'] / 1024:.0f} KiB  "
           f"avg-out-degree {float(G.average_out_degree(g)):.1f}")

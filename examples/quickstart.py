@@ -18,7 +18,9 @@ x, queries = clustered_vectors(
     VectorDatasetSpec("demo", n=8000, d=128, n_queries=500, n_clusters=64))
 _, gt = E.ground_truth(x, queries, k=1)
 
-# 2. build the index — paper Algorithm 6 (S, R, T1, T2 scaled to corpus size)
+# 2. build the index — paper Algorithm 6 (S, R, T1, T2 scaled to corpus size).
+# Edge merging defaults to the scatter-bucketed hot path (merge="bucketed");
+# merge="sort" selects the exact lexsort oracle instead.
 cfg = rd.RNNDescentConfig(s=12, r=48, t1=4, t2=6, capacity=64)
 t0 = time.perf_counter()
 graph = jax.block_until_ready(rd.build(x, cfg, jax.random.PRNGKey(1)))

@@ -3,10 +3,37 @@
 The paper's C++ implementation mutates per-vertex ``std::vector`` adjacency
 under locks. On TPU we keep a dense ``(n, M)`` adjacency with ``-1`` padding
 and express every structural mutation (edge insertion, degree capping,
-reverse-edge addition) as sort + segment-position + conflict-free scatter over
-a flat edge list. All shapes are static; all ops are jit-able.
+reverse-edge addition) through one of two interchangeable merge paths,
+selected by the ``merge`` argument (mirroring ``SearchConfig.visited``):
 
-Row invariant maintained everywhere: valid entries first, ascending distance.
+``merge="sort"`` — the exact oracle. Flatten everything into one edge list
+and run global ``jnp.lexsort``s for dedup and degree capping:
+O(E log E) per merge with E ~ 2 n M, three lexsorts per
+``update_neighbors`` sweep. Kept for tests / approximation measurements.
+
+``merge="bucketed"`` — the hot-loop default. Candidates are packed into a
+monotone ``uint32`` sort key (order-preserving distance bits via the standard
+sign-flip transform, so the negative-distance ``ip`` metric sorts correctly),
+scattered into per-row fixed-size buckets with conflict-free
+``.at[row, slot].min`` (slot = odd-multiplicative hash of the destination id,
+mirroring the search path's hashed visited table), and each row is finished
+with a cheap per-row concatenate + argsort. Complexity per merge:
+O(E) scatter work plus n independent O((M+B) log (M+B)) row sorts instead of
+global O(E log E) lexsorts. Memory: the buckets are ``n * B * 9`` bytes
+(int32 key table + int32 id table + uint8 flag table) against the sort path's
+several O(E) = O(2 n M) sorted edge-list copies; with the default
+B = next_pow2(2 * cap) the bucket state is ~the size of the adjacency itself.
+
+The odd-multiplicative slot hash is injective on ids distinct mod B, so with
+``n_buckets >= next_pow2(n)`` the bucketed path is *exactly* the sort oracle
+(asserted in tests/test_bucketed_merge.py); with the production-sized default
+a slot collision drops one of the two colliding candidates — the farther one,
+except in the priority-carrying reverse-edge pass, where a pre-existing edge
+beats a reversed copy regardless of distance (matching the oracle's dedup
+order). Lossy but safe: the algorithm is iterative and re-offers edges.
+
+All shapes are static; all ops are jit-able. Row invariant maintained
+everywhere: valid entries first, ascending distance.
 """
 from __future__ import annotations
 
@@ -17,6 +44,11 @@ import jax.numpy as jnp
 
 NEW = jnp.uint8(1)
 OLD = jnp.uint8(0)
+
+MERGE_MODES = ("sort", "bucketed")
+
+_KEY_SENTINEL = jnp.uint32(0xFFFFFFFF)   # empty bucket slot (would decode NaN)
+_SLOT_MULT = jnp.uint32(2654435761)      # Knuth; odd => bijective mod 2^k
 
 
 class Graph(NamedTuple):
@@ -64,6 +96,33 @@ def dedup_row_ids(ids: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(dup, -1, s)
 
 
+def random_init_graph(
+    key: jax.Array, x: jnp.ndarray, s: int, capacity: int, metric: str = "l2"
+) -> Graph:
+    """RandomGraph(S): ``s`` random out-neighbors per vertex (no self loops,
+    per-row deduped), distances attached, rows sorted, all flags "new".
+
+    Shared by nn_descent and rnn_descent (identical semantics, different
+    (s, capacity) pairs)."""
+    from repro.core import distances as D
+
+    n = x.shape[0]
+    ids = jax.random.randint(key, (n, s), 0, n, dtype=jnp.int32)
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+    ids = jnp.where(ids == rows, (ids + 1) % n, ids)
+    ids = dedup_row_ids(ids)
+    dist = D.gather_dists(
+        x, jnp.broadcast_to(rows, ids.shape).reshape(-1), ids.reshape(-1), metric
+    ).reshape(n, s)
+    pad = capacity - s
+    g = Graph(
+        neighbors=jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1),
+        dists=jnp.pad(dist, ((0, 0), (0, pad)), constant_values=jnp.inf),
+        flags=jnp.pad(jnp.full((n, s), NEW), ((0, 0), (0, pad)), constant_values=OLD),
+    )
+    return sort_rows(g)
+
+
 def to_edge_list(g: Graph) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """(src, dst, dist, flag) flat views; invalid slots have dst == -1."""
     n, m = g.neighbors.shape
@@ -75,6 +134,7 @@ def to_edge_list(g: Graph) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.n
     return src, dst, dist, flag
 
 
+# --------------------------------------------------------- sort-oracle path
 def _segment_positions(sorted_keys: jnp.ndarray) -> jnp.ndarray:
     """Position of each element within its run of equal keys (keys sorted)."""
     seg_start = jnp.searchsorted(sorted_keys, sorted_keys, side="left")
@@ -140,20 +200,233 @@ def edges_to_graph(
     )
 
 
+# ------------------------------------------------------- bucketed merge path
+def dist_key(d: jnp.ndarray) -> jnp.ndarray:
+    """Monotone, bijective f32 -> uint32 sort key (sign-flip transform):
+    d1 < d2  <=>  dist_key(d1) < dist_key(d2) as unsigned ints, including
+    negative distances (the ``ip`` metric) and +/-inf."""
+    b = jax.lax.bitcast_convert_type(d.astype(jnp.float32), jnp.uint32)
+    neg = (b >> jnp.uint32(31)).astype(bool)
+    return jnp.where(neg, ~b, b | jnp.uint32(0x80000000))
+
+
+def key_dist(k: jnp.ndarray) -> jnp.ndarray:
+    """Exact inverse of :func:`dist_key`."""
+    neg = (k >> jnp.uint32(31)) == 0
+    b = jnp.where(neg, ~k, k & jnp.uint32(0x7FFFFFFF))
+    return jax.lax.bitcast_convert_type(b, jnp.float32)
+
+
+def default_buckets(cap: int) -> int:
+    """Bucket width: next power of two >= max(2 * cap, 128). A power of two is
+    required by the slot mask; the 2x-over-cap headroom plus the 128 floor
+    keeps collision drops rare enough that graph quality (connectivity,
+    recall) matches the sort oracle in practice — prio-less collision
+    resolution keeps the *closer* candidate, so the occasional victim is a
+    far edge the degree cap would likely have evicted anyway (the reverse-edge
+    priority pass instead favors pre-existing edges, mirroring oracle dedup)."""
+    b = 128
+    while b < 2 * cap:
+        b *= 2
+    return b
+
+
+def _bucket_slots(ids: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    """id -> bucket slot. Multiplication by an odd constant is bijective mod
+    2^k, so ids distinct mod n_buckets land in distinct slots — with
+    n_buckets >= next_pow2(n) the mapping is injective and the bucketed merge
+    is exactly the sort oracle."""
+    assert n_buckets & (n_buckets - 1) == 0, "n_buckets must be a power of two"
+    h = ids.astype(jnp.uint32) * _SLOT_MULT
+    return (h & jnp.uint32(n_buckets - 1)).astype(jnp.int32)
+
+
+def bucket_scatter(
+    rows: jnp.ndarray, ids: jnp.ndarray, dist: jnp.ndarray, flag: jnp.ndarray,
+    n: int, n_buckets: int, prio: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Scatter a flat edge list into per-row hashed buckets.
+
+    Each (row, slot) keeps the lexicographically-least
+    (priority, distance-key, id) among the candidates hashing there — the
+    conflict-free `.at[].min` equivalent of dedup-then-keep-shortest. Since a
+    given id always hashes to the same slot, every bucket row holds distinct
+    ids. Self loops (id == row) and invalid entries are dropped.
+
+    Returns (ids, dist, flag) of shape (n, n_buckets); empty slots are
+    (-1, +inf, OLD). The winner's distance is recovered exactly from the key
+    (the sign-flip transform is bijective); its flag rides along in a final
+    winner-only max-scatter.
+    """
+    rows = rows.reshape(-1).astype(jnp.int32)
+    ids = ids.reshape(-1).astype(jnp.int32)
+    dist = dist.reshape(-1)
+    flag = flag.reshape(-1)
+    valid = (ids >= 0) & (rows >= 0) & (rows < n) & (ids != rows) & ~jnp.isnan(dist)
+    slot = _bucket_slots(ids, n_buckets)
+    key = dist_key(dist)
+    grow = jnp.where(valid, rows, 0)  # in-bounds gather index for alive checks
+
+    alive = valid
+    if prio is not None:
+        prio = prio.reshape(-1).astype(jnp.int32)
+        p_tab = jnp.full((n, n_buckets), jnp.iinfo(jnp.int32).max, jnp.int32)
+        p_tab = p_tab.at[jnp.where(alive, rows, n), slot].min(prio, mode="drop")
+        alive &= prio == p_tab[grow, slot]
+
+    k_tab = jnp.full((n, n_buckets), _KEY_SENTINEL, jnp.uint32)
+    k_tab = k_tab.at[jnp.where(alive, rows, n), slot].min(key, mode="drop")
+    alive &= key == k_tab[grow, slot]
+
+    i_tab = jnp.full((n, n_buckets), jnp.iinfo(jnp.int32).max, jnp.int32)
+    i_tab = i_tab.at[jnp.where(alive, rows, n), slot].min(ids, mode="drop")
+    alive &= ids == i_tab[grow, slot]
+
+    f_tab = jnp.zeros((n, n_buckets), jnp.uint8)
+    f_tab = f_tab.at[jnp.where(alive, rows, n), slot].max(flag, mode="drop")
+
+    empty = k_tab == _KEY_SENTINEL
+    return (
+        jnp.where(empty, jnp.int32(-1), i_tab),
+        jnp.where(empty, jnp.inf, key_dist(k_tab)),
+        jnp.where(empty, OLD, f_tab),
+    )
+
+
+def _row_topk(
+    ids: jnp.ndarray, dist: jnp.ndarray, flag: jnp.ndarray, cap: int, width: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-row: keep the ``cap`` shortest valid entries, emitted into
+    ``width`` slots under the row invariant (valid-first, ascending dist)."""
+    if ids.shape[1] < width:
+        pad = width - ids.shape[1]
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+        dist = jnp.pad(dist, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        flag = jnp.pad(flag, ((0, 0), (0, pad)))
+    dist = jnp.where(ids >= 0, dist, jnp.inf)
+    order = jnp.argsort(dist, axis=1)[:, :width]
+    ids = jnp.take_along_axis(ids, order, axis=1)
+    dist = jnp.take_along_axis(dist, order, axis=1)
+    flag = jnp.take_along_axis(flag, order, axis=1)
+    live = (jnp.arange(width)[None, :] < cap) & (ids >= 0) & (dist < jnp.inf)
+    return (
+        jnp.where(live, ids, -1),
+        jnp.where(live, dist, jnp.inf),
+        jnp.where(live, flag, OLD),
+    )
+
+
+def _merge_rows_with_buckets(
+    g: Graph, b_ids: jnp.ndarray, b_dist: jnp.ndarray, b_flag: jnp.ndarray,
+    cap: int, width: int,
+) -> Graph:
+    """Merge each adjacency row with its candidate bucket: bucket entries
+    whose id already exists in the row are dropped (pre-existing edges win and
+    keep their flag, per paper Alg. 4), then the ``cap`` shortest survivors
+    fill ``width`` output slots. One O((M+B) log (M+B)) sort pair per row."""
+    m = g.neighbors.shape[1]
+    ids = jnp.concatenate([g.neighbors, b_ids], axis=1)
+    dist = jnp.concatenate([g.dists, b_dist], axis=1)
+    flag = jnp.concatenate([g.flags, b_flag], axis=1)
+    # id-dedup with row priority: sort by (id, is_bucket) packed into uint32 —
+    # the row copy's low bit is 0, so it sorts first and survives.
+    is_bucket = (jnp.arange(ids.shape[1]) >= m).astype(jnp.uint32)
+    packed = jnp.where(
+        ids >= 0,
+        (ids.astype(jnp.uint32) << jnp.uint32(1)) | is_bucket[None, :],
+        _KEY_SENTINEL,
+    )
+    order = jnp.argsort(packed, axis=1)
+    ids = jnp.take_along_axis(ids, order, axis=1)
+    dist = jnp.take_along_axis(dist, order, axis=1)
+    flag = jnp.take_along_axis(flag, order, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(ids[:, :1], bool), (ids[:, 1:] == ids[:, :-1]) & (ids[:, 1:] >= 0)],
+        axis=1,
+    )
+    ids = jnp.where(dup, -1, ids)
+    return Graph(*_row_topk(ids, dist, flag, cap, width))
+
+
+def _merge_candidate_edges_bucketed(
+    g: Graph, cand_src, cand_dst, cand_dist, cap: int, n_buckets: int | None,
+) -> Graph:
+    n, m = g.neighbors.shape
+    b = n_buckets or default_buckets(cap)
+    b_ids, b_dist, b_flag = bucket_scatter(
+        cand_src, cand_dst, cand_dist, jnp.full(cand_dst.reshape(-1).shape, NEW), n, b
+    )
+    return _merge_rows_with_buckets(g, b_ids, b_dist, b_flag, cap, m)
+
+
+def _reverse_edge_list(
+    g: Graph,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """E ∪ reverse(E) as a flat (src, dst, dist, flag, prio) edge list.
+    Reversed copies are flagged NEW with priority 1 (originals 0), so dedup
+    keeps the original copy of a mutual edge. Shared by both merge paths —
+    they must stay semantically identical."""
+    n = g.n
+    es, ed, ew, ef = to_edge_list(g)
+    rs = jnp.where(ed >= 0, ed, n).astype(jnp.int32)
+    rd = jnp.where(ed >= 0, jnp.where(es < n, es, -1), -1).astype(jnp.int32)
+    src = jnp.concatenate([es, rs])
+    dst = jnp.concatenate([ed, rd])
+    dist = jnp.concatenate([ew, ew])
+    flag = jnp.concatenate([ef, jnp.full_like(ef, NEW)])
+    prio = jnp.concatenate([jnp.zeros_like(es), jnp.ones_like(rs)])
+    return src, dst, dist, flag, prio
+
+
+def _add_reverse_edges_bucketed(g: Graph, r: int, n_buckets: int | None) -> Graph:
+    n, m = g.neighbors.shape
+    b = n_buckets or default_buckets(r)
+    src, dst, dist, flag, prio = _reverse_edge_list(g)
+    # in-degree cap: bucket per *destination*, dedup (dst, src) with the
+    # original copy winning (priority pass), keep the R shortest incoming
+    in_ids, in_dist, in_flag = bucket_scatter(dst, src, dist, flag, n, b, prio=prio)
+    wa = min(r, b)
+    in_ids, in_dist, in_flag = _row_topk(in_ids, in_dist, in_flag, r, wa)
+    # surviving edges (u -> v): bucket row v holds in-neighbor u
+    e_src = in_ids.reshape(-1)
+    e_dst = jnp.where(
+        e_src >= 0,
+        jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, wa)).reshape(-1),
+        -1,
+    )
+    # out-degree cap: bucket per *source* (input is dedup'd, no priority pass)
+    out_ids, out_dist, out_flag = bucket_scatter(
+        e_src, e_dst, in_dist.reshape(-1), in_flag.reshape(-1), n, b
+    )
+    return Graph(*_row_topk(out_ids, out_dist, out_flag, min(r, m), m))
+
+
+# ------------------------------------------------------------- public merges
 def merge_candidate_edges(
     g: Graph,
     cand_src: jnp.ndarray,
     cand_dst: jnp.ndarray,
     cand_dist: jnp.ndarray,
     cap: int | None = None,
+    merge: str = "sort",
+    n_buckets: int | None = None,
 ) -> Graph:
     """Insert candidate edges (flagged NEW) into ``g``'s rows.
 
     Pre-existing (src, dst) duplicates win (keep their flag, per paper Alg. 4:
     "the algorithm adds no edges if the edge already exists"). Each row keeps
-    its ``cap`` (default capacity) shortest edges afterwards."""
+    its ``cap`` (default capacity) shortest edges afterwards.
+
+    ``merge`` selects the sort oracle or the scatter-bucketed fast path (see
+    module docstring); ``n_buckets`` overrides the bucket width (power of two,
+    default ``default_buckets(cap)``)."""
+    assert merge in MERGE_MODES, merge
     n, m = g.neighbors.shape
     cap = m if cap is None else cap
+    if merge == "bucketed":
+        return _merge_candidate_edges_bucketed(
+            g, cand_src, cand_dst, cand_dist, cap, n_buckets
+        )
     es, ed, ew, ef = to_edge_list(g)
     src = jnp.concatenate([es, jnp.where(cand_dst >= 0, cand_src, n).astype(jnp.int32)])
     dst = jnp.concatenate([ed, cand_dst.astype(jnp.int32)])
@@ -166,21 +439,22 @@ def merge_candidate_edges(
     return edges_to_graph(src, dst, dist, flag, n, cap)
 
 
-def add_reverse_edges(g: Graph, r: int) -> Graph:
+def add_reverse_edges(
+    g: Graph, r: int, merge: str = "sort", n_buckets: int | None = None
+) -> Graph:
     """Paper Algorithm 5, vectorized.
 
     E <- E ∪ reverse(E) (new edges flagged NEW), then cap in-degree to the R
-    shortest incoming edges per vertex, then cap out-degree likewise."""
+    shortest incoming edges per vertex, then cap out-degree likewise.
+
+    ``merge="bucketed"`` runs both degree caps as per-vertex bucket scatters
+    (in-degree: per-destination rows; out-degree: per-source rows) instead of
+    two global lexsorts."""
+    assert merge in MERGE_MODES, merge
+    if merge == "bucketed":
+        return _add_reverse_edges_bucketed(g, r, n_buckets)
     n, m = g.neighbors.shape
-    es, ed, ew, ef = to_edge_list(g)
-    # reversed copies: (dst -> src); invalid stay invalid
-    rs = jnp.where(ed >= 0, ed, n).astype(jnp.int32)
-    rd = jnp.where(ed >= 0, jnp.where(es < n, es, -1), -1).astype(jnp.int32)
-    src = jnp.concatenate([es, rs])
-    dst = jnp.concatenate([ed, rd])
-    dist = jnp.concatenate([ew, ew])
-    flag = jnp.concatenate([ef, jnp.full_like(ef, NEW)])
-    prio = jnp.concatenate([jnp.zeros_like(es), jnp.ones_like(rs)])
+    src, dst, dist, flag, prio = _reverse_edge_list(g)
     src, dst, dist, flag = dedup_edges(src, dst, dist, flag, prio, n)
     # in-degree cap (keep R shortest incoming)
     src, dst, dist, flag, _, _ = cap_by_key(dst, src, dst, dist, flag, r, n)

@@ -32,24 +32,16 @@ class NNDescentConfig:
     sample: int | None = None   # max joined neighbors per vertex (None = all K)
     metric: str = "l2"
     chunk: int = 256
+    merge: str = "bucketed"        # "bucketed" (scatter) | "sort" (oracle)
+    n_buckets: int | None = None
+
+    def __post_init__(self):
+        assert self.merge in G.MERGE_MODES, self.merge
 
 
 def random_init(key: jax.Array, x: jnp.ndarray, cfg: NNDescentConfig) -> G.Graph:
-    n = x.shape[0]
-    ids = jax.random.randint(key, (n, cfg.s), 0, n, dtype=jnp.int32)
-    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
-    ids = jnp.where(ids == rows, (ids + 1) % n, ids)
-    ids = G.dedup_row_ids(ids)
-    dist = D.gather_dists(
-        x, jnp.broadcast_to(rows, ids.shape).reshape(-1), ids.reshape(-1), cfg.metric
-    ).reshape(n, cfg.s)
-    pad = cfg.k - cfg.s
-    g = G.Graph(
-        neighbors=jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1),
-        dists=jnp.pad(dist, ((0, 0), (0, pad)), constant_values=jnp.inf),
-        flags=jnp.pad(jnp.full((n, cfg.s), G.NEW), ((0, 0), (0, pad)), constant_values=G.OLD),
-    )
-    return G.sort_rows(g)
+    """RandomGraph(S) — shared helper in graph.py (capacity = K)."""
+    return G.random_init_graph(key, x, cfg.s, cfg.k, cfg.metric)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -82,8 +74,16 @@ def join_and_update(x: jnp.ndarray, g: G.Graph, cfg: NNDescentConfig) -> G.Graph
     )
     # Alg. 2 L7: all joined vertices become "old" before new candidates land.
     aged = G.Graph(g.neighbors, g.dists, jnp.zeros_like(g.flags))
+    nb = cfg.n_buckets
+    if nb is None:
+        # the local join floods ~j^2 candidates per destination row (vs ~M
+        # redirects in rnn_descent), so buckets scale with j^2 — clamped so
+        # the scatter state stays bounded at large K (collision drops beyond
+        # the clamp only slow convergence, never corrupt rows)
+        nb = min(G.default_buckets(j * j), 2048)
     return G.merge_candidate_edges(
-        aged, src.reshape(-1), dst.reshape(-1), dist.reshape(-1), cap=cfg.k
+        aged, src.reshape(-1), dst.reshape(-1), dist.reshape(-1), cap=cfg.k,
+        merge=cfg.merge, n_buckets=nb,
     )
 
 

@@ -32,6 +32,11 @@ class NSGStyleConfig:
     knn: nnd.NNDescentConfig = dataclasses.field(default_factory=nnd.NNDescentConfig)
     metric: str = "l2"
     chunk: int = 256
+    merge: str = "bucketed"        # "bucketed" (scatter) | "sort" (oracle)
+    n_buckets: int | None = None
+
+    def __post_init__(self):
+        assert self.merge in G.MERGE_MODES, self.merge
 
 
 def reachable_mask(g: G.Graph, entry: int | jnp.ndarray, iters: int) -> jnp.ndarray:
@@ -51,10 +56,13 @@ def reachable_mask(g: G.Graph, entry: int | jnp.ndarray, iters: int) -> jnp.ndar
 def ensure_reachable(
     x: jnp.ndarray, g: G.Graph, entry: int | jnp.ndarray,
     metric: str = "l2", bfs_iters: int = 64, tile: int = 512,
+    merge: str = "sort", n_buckets: int | None = None,
 ) -> G.Graph:
     """NSG-style connectivity repair, vectorized: every vertex unreachable
     from ``entry`` receives an in-edge from its nearest *reachable* vertex.
-    One round guarantees reachability of all vertices."""
+    One round guarantees reachability of all vertices — which is why the
+    default stays ``merge="sort"``: a bucket collision here would silently
+    drop a repair edge with no later sweep to re-offer it."""
     reach = reachable_mask(g, entry, bfs_iters)
 
     def tile_nearest(qt):
@@ -69,7 +77,9 @@ def ensure_reachable(
     nearest = jax.lax.map(tile_nearest, u_p).reshape(-1)[:n]
     src = jnp.where(unreached >= 0, nearest, -1)
     dist = D.gather_dists(x, src, unreached, metric)
-    return G.merge_candidate_edges(g, src, unreached, dist)
+    return G.merge_candidate_edges(
+        g, src, unreached, dist, merge=merge, n_buckets=n_buckets
+    )
 
 
 def expand_candidates(
@@ -130,8 +140,12 @@ def build(x: jnp.ndarray, cfg: NSGStyleConfig, key: jax.Array,
         dists=pruned.dists.at[:, cfg.r:].set(jnp.inf),
         flags=pruned.flags,
     )
-    g = G.add_reverse_edges(capped, cfg.r)
+    g = G.add_reverse_edges(capped, cfg.r, merge=cfg.merge, n_buckets=cfg.n_buckets)
     if entry is None:
         from repro.core.search import default_entry_point
         entry = default_entry_point(x, cfg.metric)
+    # connectivity repair stays on the exact sort path regardless of
+    # cfg.merge: it runs once (nothing re-offers a collision-dropped repair
+    # edge) and its "one round guarantees reachability" contract would be
+    # voided by lossy bucket collisions
     return ensure_reachable(x, g, entry, cfg.metric)

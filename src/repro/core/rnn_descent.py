@@ -9,8 +9,10 @@ Paper Algorithm 6:
 
 Adaptation (DESIGN.md §2): every vertex is updated in parallel per sweep
 (Jacobi) instead of sequentially (Gauss–Seidel); replacement edges (w -> v)
-produced by the fused RNG prune are buffered and merged with a sort/segment
-scatter instead of being inserted under locks. Adjacency capacity is a static
+produced by the fused RNG prune are buffered and merged instead of being
+inserted under locks — by default through the scatter-bucketed merge
+(``merge="bucketed"``: O(E) bucket scatter + per-row sorts), with the global
+lexsort path (``merge="sort"``) kept as the exact oracle. Adjacency capacity is a static
 ``M``; the paper's unbounded out-degree is recovered at query time via the
 top-K limit (paper Eq. 4).
 """
@@ -42,34 +44,28 @@ class RNNDescentConfig:
     gram_dtype: str = "f32"    # "bf16" halves the gather+Gram HBM traffic
                                # (accumulation stays f32; recall re-validated
                                # in tests/benchmarks)
+    merge: str = "bucketed"    # edge-merge path: "bucketed" (scatter buckets,
+                               # hot-loop default) | "sort" (lexsort oracle)
+    n_buckets: int | None = None   # bucket width override (power of two;
+                                   # default graph.default_buckets(cap))
 
     def __post_init__(self):
         assert self.capacity >= self.r, "capacity must hold R reverse edges"
+        assert self.merge in G.MERGE_MODES, self.merge
 
 
 def random_init(key: jax.Array, x: jnp.ndarray, cfg: RNNDescentConfig) -> G.Graph:
-    """RandomGraph(S): S random out-neighbors per vertex, distances attached,
-    rows sorted, all flags "new"."""
-    n = x.shape[0]
-    ids = jax.random.randint(key, (n, cfg.s), 0, n, dtype=jnp.int32)
-    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
-    ids = jnp.where(ids == rows, (ids + 1) % n, ids)  # no self loops
-    ids = G.dedup_row_ids(ids)
-    dist = D.gather_dists(x, jnp.broadcast_to(rows, ids.shape).reshape(-1), ids.reshape(-1), cfg.metric)
-    pad = cfg.capacity - cfg.s
-    g = G.Graph(
-        neighbors=jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1),
-        dists=jnp.pad(dist.reshape(n, cfg.s), ((0, 0), (0, pad)), constant_values=jnp.inf),
-        flags=jnp.pad(jnp.full((n, cfg.s), G.NEW), ((0, 0), (0, pad)), constant_values=G.OLD),
-    )
-    return G.sort_rows(g)
+    """RandomGraph(S) — shared helper in graph.py."""
+    return G.random_init_graph(key, x, cfg.s, cfg.capacity, cfg.metric)
 
 
 def _fused_prune_chunk(x, cid, cdist, cflag, metric, use_pallas, gram_dtype="f32"):
     """One vertex tile of the fused NN-Descent-join + RNG-prune (Alg. 4)."""
     if use_pallas:
         from repro.kernels.rng_prune import ops as rng_ops
-        keep, red_w, red_d = rng_ops.rng_prune(x, cid, cdist, flags=cflag)
+        keep, red_w, red_d = rng_ops.rng_prune(
+            x, cid, cdist, flags=cflag, gram_dtype=gram_dtype
+        )
         return keep, red_w, red_d
     if gram_dtype == "bf16":
         x = x.astype(jnp.bfloat16)
@@ -124,13 +120,16 @@ def update_neighbors(x: jnp.ndarray, g: G.Graph, cfg: RNNDescentConfig) -> G.Gra
     cand_src = red_w.reshape(-1)                                       # w
     cand_dst = jnp.where(red_w >= 0, g.neighbors, -1).reshape(-1)      # v
     cand_dist = red_d.reshape(-1)
-    return G.merge_candidate_edges(pruned, cand_src, cand_dst, cand_dist)
+    return G.merge_candidate_edges(
+        pruned, cand_src, cand_dst, cand_dist,
+        merge=cfg.merge, n_buckets=cfg.n_buckets,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def add_reverse_edges(g: G.Graph, cfg: RNNDescentConfig) -> G.Graph:
     """Paper Algorithm 5 (vectorized in graph.py)."""
-    return G.add_reverse_edges(g, cfg.r)
+    return G.add_reverse_edges(g, cfg.r, merge=cfg.merge, n_buckets=cfg.n_buckets)
 
 
 def build(x: jnp.ndarray, cfg: RNNDescentConfig, key: jax.Array) -> G.Graph:

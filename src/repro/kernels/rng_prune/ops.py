@@ -11,7 +11,7 @@ from repro.kernels.rng_prune.kernel import rng_prune_tiles
 from repro.kernels.rng_prune.ref import rng_prune_ref
 
 
-@functools.partial(jax.jit, static_argnames=("tile_c", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tile_c", "interpret", "gram_dtype"))
 def rng_prune(
     x: jnp.ndarray,
     ids: jnp.ndarray,
@@ -19,16 +19,22 @@ def rng_prune(
     flags: jnp.ndarray | None = None,
     tile_c: int = 8,
     interpret: bool | None = None,
+    gram_dtype: str = "f32",
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Returns (keep bool, redirect_w int32, redirect_d f32), shapes (n, M).
 
     ``flags=None`` means plain Algorithm 3 (everything "new" -> no exemption).
+    ``gram_dtype="bf16"`` gathers the neighbor vectors in bfloat16, halving
+    the gather + kernel-input HBM traffic (the kernel upcasts to f32 before
+    the Gram, so accumulation precision is unchanged).
     """
     if interpret is None:
         interpret = default_interpret()
     n, m = ids.shape
     if flags is None:
         flags = jnp.ones((n, m), jnp.uint8)
+    if gram_dtype == "bf16":
+        x = x.astype(jnp.bfloat16)
     pad = (-n) % tile_c
     ids_p = jnp.pad(ids, ((0, pad), (0, 0)), constant_values=-1)
     dists_p = jnp.pad(dists, ((0, pad), (0, 0)), constant_values=jnp.inf)

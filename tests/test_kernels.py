@@ -98,6 +98,17 @@ def test_rng_prune_matches_core_path():
     np.testing.assert_array_equal(np.asarray(gj.neighbors), np.asarray(gp.neighbors))
 
 
+def test_rng_prune_gram_dtype_bf16():
+    """gram_dtype="bf16" must reach the kernel (regression: it used to be
+    silently ignored on the Pallas path) and keep decisions near-identical —
+    the kernel upcasts to f32 internally, only the gather precision changes."""
+    x, ids, dists, flags = _mk_rows(jax.random.PRNGKey(11), 16, 16, 64, 32)
+    keep32, rw32, _ = rng_prune(x, ids, dists, flags, tile_c=8)
+    keep16, rw16, _ = rng_prune(x, ids, dists, flags, tile_c=8, gram_dtype="bf16")
+    agree = np.mean(np.asarray(keep32) == np.asarray(keep16))
+    assert agree > 0.95, f"bf16 keep decisions diverged: agreement {agree}"
+
+
 # ---------------------------------------------------------------- fm_interact
 @pytest.mark.parametrize("b,f,d", [(4, 3, 8), (512, 39, 10), (1000, 40, 32), (64, 26, 128)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

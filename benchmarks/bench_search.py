@@ -1,25 +1,98 @@
 """Paper Figure 2: QPS vs Recall@1 tradeoff curves per method — plus the
 serving-memory comparison between the old dense visited bitmask and the new
-hashed visited table.
+hashed visited table, and the fused-vs-baseline comparison for the Pallas
+gather+score beam kernel.
 
 Claims validated:
   * RNN-Descent's graph matches the refinement baseline's search quality
     (recall at equal beam width) with far cheaper construction;
   * hashed-visited search reaches the dense oracle's recall (within 0.01 at
     equal L) while its visited state is O(B_tile * slots) — independent of n
-    (the dense bitmask is O(B_tile * n) and dominated serving memory)."""
+    (the dense bitmask is O(B_tile * n) and dominated serving memory);
+  * the fused beam kernel (``SearchConfig.use_pallas=True``) returns ids
+    *identical* to the jnp oracle — the ``parity`` flag below is asserted in
+    CI — while its QPS trajectory is recorded in repo-root BENCH_search.json
+    (on CPU the kernel runs interpreted, so the recorded baseline-vs-fused
+    ratio tracks the interpreter overhead; on TPU the same file tracks the
+    fusion win)."""
 from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
 
 from benchmarks import common
 
 
+def _figure2_datasets() -> list[str]:
+    """The figure-2 pair at full scale; whatever exists under BENCH_SMOKE=1."""
+    named = [ds for ds in ("sift-like", "deep-like") if ds in common.DATASETS]
+    return named or list(common.DATASETS)
+
+
+def fused_rows(l_values=(16, 32), built=None) -> list[dict]:
+    """Baseline (jnp-ref) vs fused (Pallas) QPS + parity per dataset, on the
+    rnn-descent graph through the tiled serving driver. Writes the repo-root
+    BENCH_search.json trajectory (committed, compared across PRs).
+
+    ``built`` maps dataset name -> (x, q, gt, graph) to reuse graphs a caller
+    already constructed (run() passes its figure-2 builds — construction
+    dominates the benchmark's wall-clock, so never rebuild what exists)."""
+    from repro.core import eval as E
+    from repro.core import search as S
+
+    rows = []
+    for ds in _figure2_datasets():
+        if built and ds in built:
+            x, q, gt, g = built[ds]
+        else:
+            x, q, gt = common.dataset(ds)
+            _, g = common.build_timed("rnn-descent", x)
+        ep = S.default_entry_point(x)
+        for L in l_values:
+            base = S.SearchConfig(l=L, k=32, max_iters=2 * L + 32)
+            fused = dataclasses.replace(base, use_pallas=True)
+            sec_b, (ids_b, _) = E.timed(
+                S.search_tiled, x, g, q, ep, base, tile_b=256, repeats=2)
+            sec_f, (ids_f, _) = E.timed(
+                S.search_tiled, x, g, q, ep, fused, tile_b=256, repeats=2)
+            row = {
+                "bench": "search-fused", "dataset": ds,
+                "method": "rnn-descent", "L": L,
+                "qps_ref": round(q.shape[0] / sec_b, 1),
+                "qps_fused": round(q.shape[0] / sec_f, 1),
+                "parity": bool(np.array_equal(np.asarray(ids_b),
+                                              np.asarray(ids_f))),
+                "recall_at_1": round(E.recall_at_k(ids_b, gt), 4),
+                "visited_bytes_per_tile": S.visited_state_bytes(
+                    base, x.shape[0], min(256, q.shape[0])),
+            }
+            rows.append(row)
+            common.emit(
+                f"search/fused/{ds}/L{L}",
+                1e6 / max(row["qps_fused"], 1e-9),
+                f"qps_ref={row['qps_ref']},qps_fused={row['qps_fused']},"
+                f"parity={row['parity']},recall@1={row['recall_at_1']}",
+            )
+    common.save_root_json("BENCH_search.json", {
+        "bench": "search",
+        "smoke": common.BENCH_SMOKE,
+        "kernel": "beam_score (fused gather+score, interpret on CPU)",
+        "fused_rows": rows,
+    })
+    return rows
+
+
 def run() -> list[dict]:
     rows = []
-    for ds in ("sift-like", "deep-like"):
+    built = {}
+    for ds in _figure2_datasets():
         x, q, gt = common.dataset(ds)
         for method, k_limit in (("rnn-descent", 32), ("nn-descent", 32),
                                 ("nsg-style", 24)):
             _, g = common.build_timed(method, x)
+            if method == "rnn-descent":
+                built[ds] = (x, q, gt, g)
             for visited in ("hashed", "dense"):
                 for r in common.search_sweep(x, g, q, gt, k_limit, visited=visited):
                     rows.append({"bench": "search", "dataset": ds,
@@ -30,6 +103,8 @@ def run() -> list[dict]:
                         f"recall@1={r['recall_at_1']},qps={r['qps']},"
                         f"visited_bytes={r['visited_bytes_per_tile']}",
                     )
+    # fused beam kernel vs jnp baseline (also writes BENCH_search.json)
+    rows += fused_rows(built=built)
     # headline memory comparison at the default serving config
     from repro.core import search as S
     cfg_h = S.SearchConfig()

@@ -31,6 +31,14 @@ def recall_at_k(pred_ids: jnp.ndarray, gt_ids: jnp.ndarray) -> float:
     return float(jnp.mean(hit))
 
 
+def recall_topk(pred_ids: jnp.ndarray, gt_ids: jnp.ndarray) -> float:
+    """Set recall: mean fraction of the true top-k (all gt columns) present in
+    pred — the paper's recall@k, as opposed to :func:`recall_at_k`'s
+    1-NN-in-top-k."""
+    hit = jnp.any(pred_ids[:, :, None] == gt_ids[:, None, :], axis=1)
+    return float(jnp.mean(jnp.mean(hit, axis=1)))
+
+
 def evaluate_search(
     x: jnp.ndarray,
     g: G.Graph,
@@ -44,8 +52,11 @@ def evaluate_search(
     """Recall@k + QPS over the tiled serving driver (``search_tiled``).
 
     Returns recall, queries/sec (best of ``repeats``, compile excluded by the
-    warmup repeat), and the peak visited-state footprint of one query tile —
-    the number that is now independent of the corpus size in hashed mode."""
+    warmup repeat), the peak visited-state footprint of one query tile — the
+    number that is now independent of the corpus size in hashed mode — and
+    which beam inner-loop implementation served (``cfg.use_pallas`` selects
+    the fused Pallas gather+score kernel; results are bitwise-identical
+    either way)."""
     from repro.core import search as S
 
     if entry_points is None:
@@ -59,6 +70,7 @@ def evaluate_search(
         "qps": queries.shape[0] / sec,
         "visited_mode": cfg.visited,
         "visited_bytes_per_tile": S.visited_state_bytes(cfg, x.shape[0], lanes),
+        "search_path": "pallas-fused" if cfg.use_pallas else "jnp-ref",
     }
 
 

@@ -51,6 +51,30 @@ immediately instead of spinning to whole-batch quiescence.
 For arbitrary query counts, :func:`search_tiled` streams B_tile-sized query
 tiles through ``lax.map`` so peak memory is O(B_tile * slots) regardless of
 the total batch size.
+
+Beam inner loop
+---------------
+The hot step of every iteration — gather each lane's frontier adjacency row,
+gather the neighbor vectors, score them against the query — is served by two
+interchangeable implementations selected by ``SearchConfig.use_pallas``
+(mirroring the builders' ``merge=`` and the visited-table duality):
+
+``use_pallas=False`` — the pure-jnp oracle
+    (:func:`repro.kernels.beam_score.beam_score_ref`): XLA row gathers plus a
+    batched einsum. Exact reference; also the right path when the corpus
+    exceeds the kernel's VMEM budget.
+
+``use_pallas=True`` — the fused Pallas gather+score kernel
+    (:mod:`repro.kernels.beam_score`): both gathers and the scoring happen in
+    one kernel pass, so the (B, K, d) gathered candidate block never
+    round-trips through HBM between gather and distance evaluation. Both
+    paths share one scoring function, so fused results are *bitwise* equal to
+    the oracle (asserted in tests/test_beam_score.py). Interpret mode follows
+    ``kernels.default_interpret()`` (on CPU the kernel runs interpreted).
+
+``SearchConfig.gram_dtype="bf16"`` gathers neighbor vectors in bfloat16
+(the rng_prune convention — halves gather traffic, f32 accumulation);
+``SearchConfig.kernel_tile_b`` sizes the kernel's lane tile.
 """
 from __future__ import annotations
 
@@ -62,6 +86,10 @@ import jax.numpy as jnp
 
 from repro.core import distances as D
 from repro.core import graph as G
+from repro.kernels.beam_score import beam_score, beam_score_ref, score_block
+
+METRICS = ("l2", "ip", "cos")
+GRAM_DTYPES = ("f32", "bf16")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,14 +102,44 @@ class SearchConfig:
     visited: str = "hashed"  # "hashed" (O(slots), n-independent) | "dense" (exact oracle)
     slots: int | None = None  # hashed table size (power of two); None -> resolve_slots
     probes: int = 8          # linear-probe attempts per hashed lookup/insert
+    use_pallas: bool = False  # fused Pallas gather+score kernel for the beam inner loop
+    gram_dtype: str = "f32"  # neighbor-gather dtype: "f32" | "bf16" (rng_prune convention)
+    kernel_tile_b: int = 64  # fused-kernel lane tile (VMEM ~ tile * k * d * 4 B)
 
     def __post_init__(self):
-        assert self.topk <= self.l, "topk cannot exceed the beam width"
-        assert self.visited in ("hashed", "dense"), self.visited
-        assert self.probes >= 1
-        if self.slots is not None:
-            assert self.slots >= 8 and (self.slots & (self.slots - 1)) == 0, \
-                "slots must be a power of two >= 8"
+        # config-time validation: a bad metric/gram_dtype used to surface only
+        # as a cryptic trace-time error deep inside the distance kernels (and,
+        # with use_pallas, inside the Pallas call) — reject it here instead.
+        if self.metric not in METRICS:
+            raise ValueError(
+                f"unknown metric {self.metric!r}: expected one of {METRICS}")
+        if self.gram_dtype not in GRAM_DTYPES:
+            raise ValueError(
+                f"unknown gram_dtype {self.gram_dtype!r}: expected one of "
+                f"{GRAM_DTYPES} (bf16 = gather neighbor vectors in bfloat16, "
+                "f32 accumulation)")
+        if self.kernel_tile_b < 1:
+            raise ValueError(
+                f"kernel_tile_b must be >= 1, got {self.kernel_tile_b}")
+        if min(self.l, self.k, self.max_iters, self.topk) < 1:
+            raise ValueError(
+                "l, k, max_iters and topk must all be >= 1: got "
+                f"l={self.l}, k={self.k}, max_iters={self.max_iters}, "
+                f"topk={self.topk}")
+        if self.topk > self.l:
+            raise ValueError(
+                f"topk={self.topk} cannot exceed the beam width l={self.l}")
+        if self.visited not in ("hashed", "dense"):
+            raise ValueError(
+                f"unknown visited mode {self.visited!r}: expected \"hashed\" "
+                "(O(slots) table, n-independent) or \"dense\" (exact oracle "
+                "bitmask)")
+        if self.probes < 1:
+            raise ValueError(f"probes must be >= 1, got {self.probes}")
+        if self.slots is not None and (
+                self.slots < 8 or (self.slots & (self.slots - 1)) != 0):
+            raise ValueError(
+                f"slots must be a power of two >= 8, got {self.slots}")
 
 
 def _next_pow2(v: int) -> int:
@@ -182,13 +240,19 @@ def _search_impl(
     dense = cfg.visited == "dense"
     slots = resolve_slots(cfg, e)
 
-    # --- seed the beam with E entries (duplicate seeds within a lane inert)
+    # --- seed the beam with E entries (duplicate seeds within a lane inert).
+    # Seeds score through score_block too — one op sequence for every distance
+    # in the beam, so a seed rediscovered as a candidate (lost hashed insert)
+    # re-enters under the identical f32 value. Seeds read the f32 corpus even
+    # under gram_dtype="bf16": seed vertices are marked visited, so they are
+    # never re-scored through the candidate path and the mixed precision is
+    # inert.
     dup = jnp.any(
         (eps[:, :, None] == eps[:, None, :])
         & (jnp.arange(e)[None, :, None] > jnp.arange(e)[None, None, :]),
         axis=-1,
     )
-    ep_d = jax.vmap(lambda q, vs: D.point_to_points(q, vs, cfg.metric))(queries, x[eps])
+    ep_d = score_block(x[eps], queries, cfg.metric)               # (B, E)
     seed_ids = jnp.where(dup, -1, eps)
     seed_d = jnp.where(dup, jnp.inf, ep_d)
 
@@ -228,7 +292,18 @@ def _search_impl(
         u = jnp.where(active, beam_ids[rows, slot], 0)
         expanded = expanded.at[rows, slot].max(active)
 
-        nbrs = g.neighbors[u][:, :k]                              # Eq. 4 prefix slice
+        # fused gather+score (Eq. 4 prefix slice + distance evaluation): the
+        # kernel and the jnp oracle share one scoring function, so the two
+        # paths agree bitwise — use_pallas only changes where the gathered
+        # candidate block lives (VMEM vs an HBM intermediate)
+        if cfg.use_pallas:
+            nbrs, cand_d, _ = beam_score(
+                x, g.neighbors, u, queries, k=k, metric=cfg.metric,
+                tile_b=cfg.kernel_tile_b, gram_dtype=cfg.gram_dtype)
+        else:
+            nbrs, cand_d, _ = beam_score_ref(
+                x, g.neighbors, u, queries, k=k, metric=cfg.metric,
+                gram_dtype=cfg.gram_dtype)
         valid = (nbrs >= 0) & active[:, None]
         if dense:
             seen = visited[rows[:, None], jnp.maximum(nbrs, 0)]
@@ -243,10 +318,7 @@ def _search_impl(
                 visited, nbrs, valid & ~in_beam, rows, cfg.probes)
             fresh = valid & ~seen & ~in_beam
 
-        nd = jax.vmap(lambda q, vs: D.point_to_points(q, vs, cfg.metric))(
-            queries, x[jnp.maximum(nbrs, 0)]
-        )
-        nd = jnp.where(fresh, nd, jnp.inf)
+        nd = jnp.where(fresh, cand_d, jnp.inf)
 
         all_d = jnp.concatenate([beam_d, nd], axis=1)
         all_ids = jnp.concatenate([beam_ids, jnp.where(fresh, nbrs, -1)], axis=1)

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: fused gather + score for the beam-search inner loop.
+
+Per lane tile: the frontier ids (tb, 1) select neighbor rows from the
+adjacency, each neighbor id selects its vector row from ``x``, and the
+gathered (tb, K, d) block is scored against the query tile (tb, d) — all in
+one kernel, so the candidate block never round-trips to HBM between the
+gather and the distance evaluation (the old path materialized ``x[nbrs]`` as
+a (B, K, d) HBM intermediate every beam iteration). Outputs are per-lane
+``(dist_key, neighbor_id)`` candidate pairs: the monotone uint32 key
+(``graph.dist_key`` sign-flip transform) is ready for key-ordered merging or
+the hashed visited-table probe, and decodes back to the exact f32 distance.
+
+Scoring calls :func:`repro.kernels.beam_score.ref.score_block` — the same
+function the pure-jnp oracle uses — so fused and oracle paths share one op
+sequence and the parity tests can assert bitwise equality.
+
+VMEM budget per tile (fp32): ``x``/``neighbors`` are passed as whole-array
+blocks, so the kernel targets corpora whose vectors fit VMEM alongside the
+(tb, K, d) gathered block — tb=64, K=32, d=128 -> gathered block 1 MiB.
+For corpora beyond VMEM the driver keeps the pure-jnp path (XLA row gathers
+stream from HBM); sharding ``x`` across cores under this kernel is the
+follow-up recorded in ROADMAP.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.graph import dist_key
+from repro.kernels.beam_score.ref import score_block
+
+
+def _beam_score_body(u_ref, q_ref, nbrs_ref, x_ref, keys_ref, ids_ref,
+                     *, k: int, metric: str):
+    tb = u_ref.shape[0]
+    d = x_ref.shape[1]
+
+    def gather_lane(lane, carry):
+        nbr_all, vec_all = carry
+        uid = u_ref[lane, 0]
+        row = nbrs_ref[pl.dslice(uid, 1), :]                  # (1, M)
+        nbr = row[0, :k]                                      # Eq. 4 prefix
+
+        def gather_j(j, vacc):
+            vid = jnp.maximum(nbr[j], 0)
+            vrow = x_ref[pl.dslice(vid, 1), :]                # (1, d)
+            return jax.lax.dynamic_update_slice(
+                vacc, vrow.astype(jnp.float32)[None], (lane, j, 0))
+
+        vec_all = jax.lax.fori_loop(0, k, gather_j, vec_all)
+        nbr_all = jax.lax.dynamic_update_slice(nbr_all, nbr[None], (lane, 0))
+        return nbr_all, vec_all
+
+    nbrs, vecs = jax.lax.fori_loop(
+        0, tb, gather_lane,
+        (jnp.full((tb, k), -1, jnp.int32), jnp.zeros((tb, k, d), jnp.float32)),
+    )
+    dist = score_block(vecs, q_ref[...], metric)              # (tb, k)
+    valid = nbrs >= 0
+    dist = jnp.where(valid, dist, jnp.inf)
+    keys_ref[...] = dist_key(dist)
+    ids_ref[...] = jnp.where(valid, nbrs, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "tile_b", "interpret"))
+def beam_score_tiles(
+    u2: jnp.ndarray,        # (B, 1) int32, B % tile_b == 0, values in [0, n)
+    queries: jnp.ndarray,   # (B, d)
+    neighbors: jnp.ndarray,  # (n, M) int32, -1 padded
+    x: jnp.ndarray,         # (n, d)
+    k: int, metric: str, tile_b: int, interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (keys uint32, ids int32), each (B, k)."""
+    if interpret is None:
+        from repro.kernels import default_interpret
+        interpret = default_interpret()
+    b = u2.shape[0]
+    n, m = neighbors.shape
+    d = x.shape[1]
+    assert b % tile_b == 0
+    grid = (b // tile_b,)
+    return pl.pallas_call(
+        functools.partial(_beam_score_body, k=k, metric=metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, m), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_b, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.uint32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(u2, queries, neighbors, x)

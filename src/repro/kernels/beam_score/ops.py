@@ -1,0 +1,59 @@
+"""Jit'd wrapper: pad + kernel dispatch for the fused gather+score beam step."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import graph as G
+from repro.kernels import default_interpret
+from repro.kernels.beam_score.kernel import beam_score_tiles
+from repro.kernels.beam_score.ref import beam_score_ref
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "tile_b",
+                                             "interpret", "gram_dtype"))
+def beam_score(
+    x: jnp.ndarray,
+    neighbors: jnp.ndarray,
+    u: jnp.ndarray,
+    queries: jnp.ndarray,
+    k: int,
+    metric: str = "l2",
+    tile_b: int = 64,
+    interpret: bool | None = None,
+    gram_dtype: str = "f32",
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused one-step beam expansion: gather ``neighbors[u][:, :k]``, gather
+    their vectors from ``x``, score against ``queries`` — one kernel pass.
+
+    Returns ``(ids, dists, keys)``, each (B, k): int32 neighbor ids (-1 for
+    padded adjacency slots), f32 distances (+inf for padded slots), and the
+    monotone uint32 sort key per candidate. ``dists`` is decoded from ``keys``
+    via the exact inverse transform, so it is bitwise-equal to the oracle's
+    f32 distances.
+
+    ``gram_dtype="bf16"`` gathers the neighbor vectors in bfloat16 (the
+    rng_prune convention — halves the gather traffic; the kernel upcasts to
+    f32 before scoring). ``tile_b`` sizes the kernel's lane tile: VMEM holds
+    a (tile_b, k, d) f32 gathered block per grid step.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b = u.shape[0]
+    k = min(k, neighbors.shape[1])
+    if gram_dtype == "bf16":
+        x = x.astype(jnp.bfloat16)
+    tile_b = max(1, min(tile_b, b))
+    pad = (-b) % tile_b
+    u_p = jnp.pad(u.astype(jnp.int32), (0, pad))[:, None]
+    q_p = jnp.pad(queries, ((0, pad), (0, 0)))
+    keys, ids = beam_score_tiles(
+        u_p, q_p, neighbors, x, k=k, metric=metric, tile_b=tile_b,
+        interpret=interpret)
+    keys, ids = keys[:b], ids[:b]
+    return ids, G.key_dist(keys), keys
+
+
+__all__ = ["beam_score", "beam_score_ref"]

@@ -1,0 +1,75 @@
+"""Pure-jnp oracle for the fused gather+score beam kernel.
+
+:func:`score_block` is the single source of truth for the scoring math: the
+Pallas kernel body imports and calls it on its VMEM tile, so the fused path
+and this oracle execute the *same* op sequence (same einsum contraction, same
+clamps) on f32 inputs. That is what makes the bitwise id/key parity asserted
+in tests/test_beam_score.py an equality, not a tolerance.
+
+``gram_dtype`` follows the rng_prune convention: ``"bf16"`` means the
+neighbor vectors are *gathered* in bfloat16 (halving gather HBM traffic);
+everything is upcast to f32 before any arithmetic, so accumulation precision
+is unchanged and only the stored-vector precision differs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import graph as G
+
+
+def score_block(vecs: jnp.ndarray, q: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """(..., K, d) gathered neighbor block x (..., d) queries -> (..., K) f32
+    distances (smaller is closer for every metric). Inputs are upcast to f32
+    before any arithmetic."""
+    v = vecs.astype(jnp.float32)
+    qq = q.astype(jnp.float32)
+    # every d-reduction is an einsum/dot_general: XLA keeps dot reduction
+    # order fixed across fusion contexts, where a fused jnp.sum(v*v) does
+    # not — and the Pallas-interpret and pure-jnp paths must agree bitwise
+    # (asserted in tests/test_beam_score.py), not just to tolerance.
+    sqsum = lambda a: jnp.einsum("...d,...d->...", a, a,
+                                 preferred_element_type=jnp.float32)
+    if metric == "l2":
+        dot = jnp.einsum("...kd,...d->...k", v, qq,
+                         preferred_element_type=jnp.float32)
+        return jnp.maximum(sqsum(qq)[..., None] + sqsum(v) - 2.0 * dot, 0.0)
+    if metric == "ip":
+        return -jnp.einsum("...kd,...d->...k", v, qq,
+                           preferred_element_type=jnp.float32)
+    if metric == "cos":
+        vn = v / jnp.maximum(jnp.sqrt(sqsum(v))[..., None], 1e-12)
+        qn = qq / jnp.maximum(jnp.sqrt(sqsum(qq))[..., None], 1e-12)
+        return 1.0 - jnp.einsum("...kd,...d->...k", vn, qn,
+                                preferred_element_type=jnp.float32)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def beam_score_ref(
+    x: jnp.ndarray,
+    neighbors: jnp.ndarray,
+    u: jnp.ndarray,
+    queries: jnp.ndarray,
+    k: int,
+    metric: str = "l2",
+    gram_dtype: str = "f32",
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Gather + score one beam expansion step, pure jnp.
+
+    ``u`` (B,) frontier vertex ids -> for each lane, its first ``k``
+    out-neighbors from ``neighbors`` (n, M) are gathered from ``x`` and scored
+    against ``queries`` (B, d). Returns ``(ids, dists, keys)`` each (B, k):
+    int32 neighbor ids (-1 for padded slots), f32 distances (+inf for padded
+    slots), and the monotone uint32 sort key of each distance
+    (:func:`repro.core.graph.dist_key` — ready for key-ordered merge or the
+    hashed visited-table probe).
+    """
+    if gram_dtype == "bf16":
+        x = x.astype(jnp.bfloat16)
+    nbrs = neighbors[u][:, :k]                       # Eq. 4 prefix slice
+    vecs = x[jnp.maximum(nbrs, 0)]                   # (B, k, d)
+    d = score_block(vecs, queries, metric)
+    valid = nbrs >= 0
+    d = jnp.where(valid, d, jnp.inf)
+    ids = jnp.where(valid, nbrs, -1)
+    return ids, d, G.dist_key(d)

@@ -1,0 +1,182 @@
+"""Fused gather+score beam kernel vs the pure-jnp oracle.
+
+The contract is *bitwise* equality, not tolerance: kernel and oracle share one
+scoring function (``score_block``) whose d-reductions are all einsums, so the
+Pallas-interpret and jnp paths lower to the same dot_generals and every
+distance key matches exactly — which is what lets ``use_pallas=True`` serve
+bit-identical results to the beam oracle.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # degrades to skip without hypothesis
+
+from repro.core import graph as G
+from repro.core import rnn_descent as rd
+from repro.core import search as S
+from repro.kernels.beam_score import beam_score, beam_score_ref
+
+METRICS = ("l2", "ip", "cos")
+GRAM_DTYPES = ("f32", "bf16")
+
+
+def _setup(seed=0, n=120, d=16, m=12, b=24, n_valid=9, dup=False):
+    kx, kn, ku, kq = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(kx, (n, d), jnp.float32)
+    nbrs = jax.random.randint(kn, (n, m), 0, n, jnp.int32)
+    nbrs = nbrs.at[:, n_valid:].set(-1)          # padded adjacency slots
+    if dup:
+        nbrs = nbrs.at[:, 1].set(nbrs[:, 0])     # duplicate neighbor per row
+    u = jax.random.randint(ku, (b,), 0, n, jnp.int32)
+    q = jax.random.normal(kq, (b, d), jnp.float32)
+    return x, nbrs, u, q
+
+
+def _assert_bitwise(x, nbrs, u, q, k, metric, gram_dtype, tile_b=16):
+    ids, dists, keys = beam_score(
+        x, nbrs, u, q, k=k, metric=metric, tile_b=tile_b, interpret=True,
+        gram_dtype=gram_dtype)
+    rids, rdists, rkeys = beam_score_ref(
+        x, nbrs, u, q, k=k, metric=metric, gram_dtype=gram_dtype)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(rids))
+    np.testing.assert_array_equal(np.asarray(keys), np.asarray(rkeys))
+    np.testing.assert_array_equal(np.asarray(dists), np.asarray(rdists))
+    return ids, dists, keys
+
+
+# ------------------------------------------------------------- kernel parity
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("gram_dtype", GRAM_DTYPES)
+def test_kernel_bitwise_parity(metric, gram_dtype):
+    x, nbrs, u, q = _setup()
+    ids, dists, keys = _assert_bitwise(x, nbrs, u, q, 12, metric, gram_dtype)
+    # padded slots surface as (-1, +inf, key(inf)); valid ones are finite
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    assert ((ids == -1) == np.isinf(dists)).all()
+    assert (ids[:, :9] >= 0).all() and (ids[:, 9:] == -1).all()
+    # keys decode back to the exact distances (monotone bijection)
+    np.testing.assert_array_equal(np.asarray(G.key_dist(keys)), dists)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_kernel_edge_cases(metric):
+    # duplicate neighbors within a row score identically per slot
+    x, nbrs, u, q = _setup(seed=3, dup=True)
+    ids, dists, _ = _assert_bitwise(x, nbrs, u, q, 12, metric, "f32")
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    assert (ids[:, 0] == ids[:, 1]).all()
+    np.testing.assert_array_equal(dists[:, 0], dists[:, 1])
+    # B=1 frontier
+    x, nbrs, u, q = _setup(seed=4, b=1)
+    _assert_bitwise(x, nbrs, u, q, 12, metric, "f32")
+    # frontier smaller than the kernel tile (tile clamps + pads)
+    x, nbrs, u, q = _setup(seed=5, b=5)
+    _assert_bitwise(x, nbrs, u, q, 12, metric, "f32", tile_b=64)
+    # frontier not a multiple of the tile (pad-and-slice path)
+    x, nbrs, u, q = _setup(seed=6, b=21)
+    _assert_bitwise(x, nbrs, u, q, 12, metric, "f32", tile_b=8)
+    # k < M: Eq. 4 prefix slice inside the kernel
+    x, nbrs, u, q = _setup(seed=7)
+    ids, _, _ = _assert_bitwise(x, nbrs, u, q, 4, metric, "f32")
+    assert np.asarray(ids).shape == (24, 4)
+
+
+def test_fully_padded_rows():
+    """A frontier vertex with zero valid neighbors yields all (-1, inf)."""
+    x, nbrs, u, q = _setup(seed=8, n_valid=0)
+    ids, dists, _ = _assert_bitwise(x, nbrs, u, q, 12, "l2", "f32")
+    assert (np.asarray(ids) == -1).all()
+    assert np.isinf(np.asarray(dists)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(4, 80), m=st.integers(1, 16), b=st.integers(1, 20),
+       d=st.integers(1, 32), n_valid_frac=st.floats(0.0, 1.0),
+       metric=st.sampled_from(METRICS), seed=st.integers(0, 2**31 - 1))
+def test_beam_score_property(n, m, b, d, n_valid_frac, metric, seed):
+    x, nbrs, u, q = _setup(seed=seed, n=n, d=d, m=m, b=b,
+                           n_valid=int(m * n_valid_frac))
+    k = min(8, m)
+    ids, dists, _ = _assert_bitwise(x, nbrs, u, q, k, metric, "f32",
+                                    tile_b=min(8, b))
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    assert ids.shape == (b, k)
+    assert (np.isfinite(dists) == (ids >= 0)).all()
+    if metric in ("l2", "cos"):
+        assert (dists[ids >= 0] >= 0).all()
+
+
+# --------------------------------------------- fused search vs beam oracle
+@pytest.fixture(scope="module")
+def corpus():
+    kx, kq = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (400, 24), jnp.float32)
+    q = jax.random.normal(kq, (20, 24), jnp.float32)
+    return x, q
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("gram_dtype", GRAM_DTYPES)
+def test_fused_search_bitwise_matches_oracle(corpus, metric, gram_dtype):
+    """Acceptance: use_pallas=True (interpret on CPU) returns bit-identical
+    top-k ids *and distances* to the ref.py beam oracle, every metric x
+    gather dtype."""
+    x, q = corpus
+    g = rd.build(x, rd.RNNDescentConfig(metric=metric, s=6, r=12, t1=2, t2=3,
+                                        capacity=16, chunk=128),
+                 jax.random.PRNGKey(1))
+    ep = S.default_entry_point(x, metric)
+    base = S.SearchConfig(l=16, k=12, max_iters=64, metric=metric, topk=5,
+                          gram_dtype=gram_dtype)
+    ids_o, d_o = S.search(x, g, q, ep, base)
+    ids_f, d_f = S.search(x, g, q, ep,
+                          dataclasses.replace(base, use_pallas=True))
+    np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_o))
+    np.testing.assert_array_equal(np.asarray(d_f), np.asarray(d_o))
+
+
+def test_fused_search_tiled_and_visited_modes(corpus):
+    """Parity survives the tiled driver, both visited modes, multi-entry
+    seeding, and a kernel tile that does not divide the lane count."""
+    x, q = corpus
+    g = rd.build(x, rd.RNNDescentConfig(s=6, r=12, t1=2, t2=3, capacity=16,
+                                        chunk=128), jax.random.PRNGKey(1))
+    eps = jnp.broadcast_to(S.default_entry_points(x, 3)[None], (q.shape[0], 3))
+    for visited in ("hashed", "dense"):
+        cfg = S.SearchConfig(l=16, k=12, max_iters=64, topk=4, visited=visited)
+        ids_o, d_o = S.search_tiled(x, g, q, eps, cfg, tile_b=16)
+        ids_f, d_f = S.search_tiled(
+            x, g, q, eps,
+            dataclasses.replace(cfg, use_pallas=True, kernel_tile_b=7),
+            tile_b=16)
+        np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_o))
+        np.testing.assert_array_equal(np.asarray(d_f), np.asarray(d_o))
+
+
+# ------------------------------------------------------- config validation
+def test_search_config_rejects_invalid_combos():
+    with pytest.raises(ValueError, match="unknown metric"):
+        S.SearchConfig(metric="euclidean")
+    with pytest.raises(ValueError, match="unknown gram_dtype"):
+        S.SearchConfig(gram_dtype="fp16")
+    with pytest.raises(ValueError, match="kernel_tile_b"):
+        S.SearchConfig(kernel_tile_b=0)
+    with pytest.raises(ValueError, match="must all be >= 1"):
+        S.SearchConfig(max_iters=0)
+    with pytest.raises(ValueError, match="unknown visited mode"):
+        S.SearchConfig(visited="bloom")
+    with pytest.raises(ValueError, match="topk.*beam width"):
+        S.SearchConfig(l=8, topk=9)
+    with pytest.raises(ValueError, match="probes"):
+        S.SearchConfig(probes=0)
+    with pytest.raises(ValueError, match="power of two"):
+        S.SearchConfig(slots=48)
+    # the valid surface stays constructible
+    for metric in METRICS:
+        for gd in GRAM_DTYPES:
+            for visited in ("hashed", "dense"):
+                S.SearchConfig(metric=metric, gram_dtype=gd, visited=visited,
+                               use_pallas=True)

@@ -162,11 +162,13 @@ def test_resolve_slots_power_of_two():
 
 
 def test_config_validation():
-    with pytest.raises(AssertionError):
+    # all config rejections are ValueError with a message (PR 3 turned the
+    # old bare asserts into clear errors; full matrix in test_beam_score.py)
+    with pytest.raises(ValueError, match="topk"):
         S.SearchConfig(l=8, topk=9)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="visited"):
         S.SearchConfig(visited="bloom")
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="power of two"):
         S.SearchConfig(slots=1000)  # not a power of two
 
 

@@ -41,15 +41,58 @@ def _sweep_breakdown(x, cfg) -> dict:
     }
 
 
+def sharded_rows(built=None) -> list[dict]:
+    """Sharded-vs-single construction over every visible device: build each
+    method on the full-width mesh (core/shard.py row sharding) and record
+    seconds plus the bitwise-parity bit against the single-device graph.
+
+    ``built`` maps (dataset, method) -> (x, seconds_single, graph_single) to
+    reuse builds a caller already timed (run() passes its figure-3 builds).
+    On a 1-device mesh the rows still exercise the full sharded code path
+    (padding, partial tables, the degenerate all_to_all); under the CI mesh
+    job (XLA_FLAGS=--xla_force_host_platform_device_count=8) the exchange
+    crosses 8 shards — parity must hold either way and is asserted in CI."""
+    import jax
+
+    mesh = common.ann_mesh()
+    devices = jax.device_count()
+    rows = []
+    for ds in common.DATASETS:
+        for method in ("rnn-descent", "nn-descent", "nsg-style"):
+            if built and (ds, method) in built:
+                x, sec_single, g_single = built[(ds, method)]
+            else:
+                x, _, _ = common.dataset(ds)
+                sec_single, g_single = common.build_timed(method, x)
+            sec_shard, g_shard = common.build_timed(method, x, mesh=mesh)
+            row = {
+                "bench": "construction-sharded",
+                "dataset": ds,
+                "method": method,
+                "devices": devices,
+                "seconds_single": round(sec_single, 3),
+                "seconds_sharded": round(sec_shard, 3),
+                "parity": common.graphs_equal(g_single, g_shard),
+            }
+            rows.append(row)
+            common.emit(
+                f"construction-sharded/{ds}/{method}", sec_shard * 1e6,
+                f"devices={devices},single_s={row['seconds_single']},"
+                f"parity={row['parity']}")
+    return rows
+
+
 def run() -> list[dict]:
     from repro.core import graph as G
 
     rows = []
     breakdown: dict[str, dict] = {}
+    built: dict[tuple, tuple] = {}
     for ds in common.DATASETS:
         x, q, gt = common.dataset(ds)
         for method in ("rnn-descent", "nn-descent", "nsg-style"):
             sec, g = common.build_timed(method, x)
+            built[(ds, method)] = (x, sec, g)
             rows.append({
                 "bench": "construction",
                 "dataset": ds,
@@ -77,13 +120,15 @@ def run() -> list[dict]:
             "bucketed": _sweep_breakdown(x, common.RNND_CFG),
             "sort": _sweep_breakdown(x, sort_cfg),
         }
+    shard_rows = sharded_rows(built=built)
     payload = {
         "bench": "construction",
         "merge_default": "bucketed",
         "smoke": common.BENCH_SMOKE,
         "rows": rows,
+        "sharded_rows": shard_rows,
         "sweep_breakdown": breakdown,
     }
-    common.save_json("bench_construction", rows)
+    common.save_json("bench_construction", rows + shard_rows)
     common.save_root_json("BENCH_construction.json", payload)
-    return rows
+    return rows + shard_rows

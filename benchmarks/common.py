@@ -66,10 +66,19 @@ def dataset(name: str, key=0):
     return x, q, gt
 
 
-def build_timed(builder: str, x, key=1, cfg=None):
+def ann_mesh():
+    """One mesh over every visible device, with the ANN logical axes (rows /
+    queries) routed onto it — 1-wide on a plain CPU, 8-wide under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 (the CI mesh job)."""
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh((jax.device_count(),), ("data",))
+
+
+def build_timed(builder: str, x, key=1, cfg=None, mesh=None):
     """Returns (seconds, graph). ``cfg`` overrides the default per-builder
     config (e.g. to time the ``merge="sort"`` oracle against the bucketed
-    default).
+    default); ``mesh`` routes through the sharded build (core/shard.py).
 
     The warmup runs on the *full* corpus: jit caches are per-shape, so the old
     smaller-slice warmup left the timed call paying full compilation — which
@@ -77,9 +86,9 @@ def build_timed(builder: str, x, key=1, cfg=None):
     exists to measure."""
     k = jax.random.PRNGKey(key)
     fns = {
-        "rnn-descent": lambda xx: rd.build(xx, cfg or RNND_CFG, k),
-        "nn-descent": lambda xx: nnd.build(xx, cfg or NND_CFG, k),
-        "nsg-style": lambda xx: nsg_style.build(xx, cfg or NSG_CFG, k),
+        "rnn-descent": lambda xx: rd.build(xx, cfg or RNND_CFG, k, mesh=mesh),
+        "nn-descent": lambda xx: nnd.build(xx, cfg or NND_CFG, k, mesh=mesh),
+        "nsg-style": lambda xx: nsg_style.build(xx, cfg or NSG_CFG, k, mesh=mesh),
     }
     fn = fns[builder]
     jax.block_until_ready(fn(x))   # warm compile at the timed shapes
@@ -111,6 +120,17 @@ def search_sweep(x, g, q, gt, k_limit: int, l_values=SEARCH_L_SWEEP,
             "visited_bytes_per_tile": S.visited_state_bytes(cfg, x.shape[0], lanes),
         })
     return rows
+
+
+def graphs_equal(a, b) -> bool:
+    """Bitwise graph equality (ids, uint32 dist keys, flags) — the sharded
+    parity contract the benchmarks record and CI asserts."""
+    return (
+        np.array_equal(np.asarray(a.neighbors), np.asarray(b.neighbors))
+        and np.array_equal(np.asarray(G.dist_key(a.dists)),
+                           np.asarray(G.dist_key(b.dists)))
+        and np.array_equal(np.asarray(a.flags), np.asarray(b.flags))
+    )
 
 
 def emit(name: str, us_per_call: float, derived: str) -> str:

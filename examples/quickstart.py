@@ -48,3 +48,14 @@ fused = dataclasses.replace(S.SearchConfig(l=32, k=32, max_iters=96),
 ids_f, _ = S.search_tiled(x, graph, queries, entry, fused, tile_b=128)
 print(f"  fused beam kernel: recall@1={E.recall_at_k(ids_f, gt):.4f} "
       "(identical to the jnp path)")
+
+# 5. scale out: both build and serve take a mesh and return *exactly* the
+# same results — rd.build(x, cfg, key, mesh=mesh) shards graph rows,
+# search_tiled(..., mesh=mesh) shards query tiles. See the "Scaling out"
+# section in examples/build_and_search.py; on CPU forge devices with
+# XLA_FLAGS=--xla_force_host_platform_device_count=8.
+mesh = jax.make_mesh((jax.device_count(),), ("data",))
+scfg = S.SearchConfig(l=32, k=32, max_iters=96)
+ids_m, _ = S.search_tiled(x, graph, queries, entry, scfg, tile_b=128, mesh=mesh)
+print(f"  sharded serving ({jax.device_count()} device(s)): "
+      f"recall@1={E.recall_at_k(ids_m, gt):.4f} (identical to unsharded)")

@@ -241,6 +241,93 @@ def _bucket_slots(ids: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
     return (h & jnp.uint32(n_buckets - 1)).astype(jnp.int32)
 
 
+def bucket_scatter_tables(
+    rows: jnp.ndarray, ids: jnp.ndarray, dist: jnp.ndarray, flag: jnp.ndarray,
+    n: int, n_buckets: int, prio: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray | None, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Raw staged bucket tables for a flat edge list: ``(p, k, i, f)`` of
+    shape (n, n_buckets) — winning priority (None when ``prio`` is None),
+    uint32 distance key, id, and flag per (row, slot).
+
+    Each (row, slot) holds the lexicographically-least (priority,
+    distance-key, id) among the candidates hashing there; the flag is the max
+    over candidates achieving that winning triple. That reduction is
+    associative and commutative, so tables computed over any partition of the
+    edge list combine exactly via :func:`combine_bucket_tables` — the property
+    the multi-device sharded build (core/shard.py) relies on for bitwise
+    parity. Empty slots are (INT32_MAX, _KEY_SENTINEL, INT32_MAX, 0).
+    """
+    rows = rows.reshape(-1).astype(jnp.int32)
+    ids = ids.reshape(-1).astype(jnp.int32)
+    dist = dist.reshape(-1)
+    flag = flag.reshape(-1)
+    valid = (ids >= 0) & (rows >= 0) & (rows < n) & (ids != rows) & ~jnp.isnan(dist)
+    slot = _bucket_slots(ids, n_buckets)
+    key = dist_key(dist)
+    grow = jnp.where(valid, rows, 0)  # in-bounds gather index for alive checks
+
+    alive = valid
+    p_tab = None
+    if prio is not None:
+        prio = prio.reshape(-1).astype(jnp.int32)
+        p_tab = jnp.full((n, n_buckets), jnp.iinfo(jnp.int32).max, jnp.int32)
+        p_tab = p_tab.at[jnp.where(alive, rows, n), slot].min(prio, mode="drop")
+        alive &= prio == p_tab[grow, slot]
+
+    k_tab = jnp.full((n, n_buckets), _KEY_SENTINEL, jnp.uint32)
+    k_tab = k_tab.at[jnp.where(alive, rows, n), slot].min(key, mode="drop")
+    alive &= key == k_tab[grow, slot]
+
+    i_tab = jnp.full((n, n_buckets), jnp.iinfo(jnp.int32).max, jnp.int32)
+    i_tab = i_tab.at[jnp.where(alive, rows, n), slot].min(ids, mode="drop")
+    alive &= ids == i_tab[grow, slot]
+
+    f_tab = jnp.zeros((n, n_buckets), jnp.uint8)
+    f_tab = f_tab.at[jnp.where(alive, rows, n), slot].max(flag, mode="drop")
+    return p_tab, k_tab, i_tab, f_tab
+
+
+def combine_bucket_tables(
+    p: jnp.ndarray | None, k: jnp.ndarray, i: jnp.ndarray, f: jnp.ndarray,
+) -> tuple[jnp.ndarray | None, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fold stacked partial bucket tables (leading axis = partition index)
+    into the tables of the union edge list.
+
+    Replays the staged lexicographic-min logic of
+    :func:`bucket_scatter_tables` across partials: the winner is the
+    lexicographically-least (priority, key, id); the flag is the max over
+    partials holding that exact winner. Since per-(row, slot) winners of a
+    partition min-combine to the global winner, the fold is *exactly* the
+    single-pass scatter over the concatenated list — the cross-shard exchange
+    in core/shard.py reduces with this and stays bitwise equal to the
+    single-device build."""
+    alive = jnp.ones(k.shape, bool)
+    p_min = None
+    if p is not None:
+        p_min = jnp.min(p, axis=0)
+        alive = p == p_min[None]
+    k_min = jnp.min(jnp.where(alive, k, _KEY_SENTINEL), axis=0)
+    alive &= k == k_min[None]
+    i_min = jnp.min(jnp.where(alive, i, jnp.iinfo(jnp.int32).max), axis=0)
+    alive &= i == i_min[None]
+    f_max = jnp.max(jnp.where(alive, f, jnp.uint8(0)), axis=0)
+    return p_min, k_min, i_min, f_max
+
+
+def decode_bucket_tables(
+    k_tab: jnp.ndarray, i_tab: jnp.ndarray, f_tab: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Raw tables -> (ids, dist, flag); empty slots become (-1, +inf, OLD).
+    The winner's distance is recovered exactly from the key (the sign-flip
+    transform is bijective)."""
+    empty = k_tab == _KEY_SENTINEL
+    return (
+        jnp.where(empty, jnp.int32(-1), i_tab),
+        jnp.where(empty, jnp.inf, key_dist(k_tab)),
+        jnp.where(empty, OLD, f_tab),
+    )
+
+
 def bucket_scatter(
     rows: jnp.ndarray, ids: jnp.ndarray, dist: jnp.ndarray, flag: jnp.ndarray,
     n: int, n_buckets: int, prio: jnp.ndarray | None = None,
@@ -258,42 +345,13 @@ def bucket_scatter(
     (the sign-flip transform is bijective); its flag rides along in a final
     winner-only max-scatter.
     """
-    rows = rows.reshape(-1).astype(jnp.int32)
-    ids = ids.reshape(-1).astype(jnp.int32)
-    dist = dist.reshape(-1)
-    flag = flag.reshape(-1)
-    valid = (ids >= 0) & (rows >= 0) & (rows < n) & (ids != rows) & ~jnp.isnan(dist)
-    slot = _bucket_slots(ids, n_buckets)
-    key = dist_key(dist)
-    grow = jnp.where(valid, rows, 0)  # in-bounds gather index for alive checks
-
-    alive = valid
-    if prio is not None:
-        prio = prio.reshape(-1).astype(jnp.int32)
-        p_tab = jnp.full((n, n_buckets), jnp.iinfo(jnp.int32).max, jnp.int32)
-        p_tab = p_tab.at[jnp.where(alive, rows, n), slot].min(prio, mode="drop")
-        alive &= prio == p_tab[grow, slot]
-
-    k_tab = jnp.full((n, n_buckets), _KEY_SENTINEL, jnp.uint32)
-    k_tab = k_tab.at[jnp.where(alive, rows, n), slot].min(key, mode="drop")
-    alive &= key == k_tab[grow, slot]
-
-    i_tab = jnp.full((n, n_buckets), jnp.iinfo(jnp.int32).max, jnp.int32)
-    i_tab = i_tab.at[jnp.where(alive, rows, n), slot].min(ids, mode="drop")
-    alive &= ids == i_tab[grow, slot]
-
-    f_tab = jnp.zeros((n, n_buckets), jnp.uint8)
-    f_tab = f_tab.at[jnp.where(alive, rows, n), slot].max(flag, mode="drop")
-
-    empty = k_tab == _KEY_SENTINEL
-    return (
-        jnp.where(empty, jnp.int32(-1), i_tab),
-        jnp.where(empty, jnp.inf, key_dist(k_tab)),
-        jnp.where(empty, OLD, f_tab),
+    _, k_tab, i_tab, f_tab = bucket_scatter_tables(
+        rows, ids, dist, flag, n, n_buckets, prio=prio
     )
+    return decode_bucket_tables(k_tab, i_tab, f_tab)
 
 
-def _row_topk(
+def row_topk(
     ids: jnp.ndarray, dist: jnp.ndarray, flag: jnp.ndarray, cap: int, width: int,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Per-row: keep the ``cap`` shortest valid entries, emitted into
@@ -316,7 +374,7 @@ def _row_topk(
     )
 
 
-def _merge_rows_with_buckets(
+def merge_rows_with_buckets(
     g: Graph, b_ids: jnp.ndarray, b_dist: jnp.ndarray, b_flag: jnp.ndarray,
     cap: int, width: int,
 ) -> Graph:
@@ -345,7 +403,7 @@ def _merge_rows_with_buckets(
         axis=1,
     )
     ids = jnp.where(dup, -1, ids)
-    return Graph(*_row_topk(ids, dist, flag, cap, width))
+    return Graph(*row_topk(ids, dist, flag, cap, width))
 
 
 def _merge_candidate_edges_bucketed(
@@ -356,7 +414,7 @@ def _merge_candidate_edges_bucketed(
     b_ids, b_dist, b_flag = bucket_scatter(
         cand_src, cand_dst, cand_dist, jnp.full(cand_dst.reshape(-1).shape, NEW), n, b
     )
-    return _merge_rows_with_buckets(g, b_ids, b_dist, b_flag, cap, m)
+    return merge_rows_with_buckets(g, b_ids, b_dist, b_flag, cap, m)
 
 
 def _reverse_edge_list(
@@ -386,7 +444,7 @@ def _add_reverse_edges_bucketed(g: Graph, r: int, n_buckets: int | None) -> Grap
     # original copy winning (priority pass), keep the R shortest incoming
     in_ids, in_dist, in_flag = bucket_scatter(dst, src, dist, flag, n, b, prio=prio)
     wa = min(r, b)
-    in_ids, in_dist, in_flag = _row_topk(in_ids, in_dist, in_flag, r, wa)
+    in_ids, in_dist, in_flag = row_topk(in_ids, in_dist, in_flag, r, wa)
     # surviving edges (u -> v): bucket row v holds in-neighbor u
     e_src = in_ids.reshape(-1)
     e_dst = jnp.where(
@@ -398,7 +456,7 @@ def _add_reverse_edges_bucketed(g: Graph, r: int, n_buckets: int | None) -> Grap
     out_ids, out_dist, out_flag = bucket_scatter(
         e_src, e_dst, in_dist.reshape(-1), in_flag.reshape(-1), n, b
     )
-    return Graph(*_row_topk(out_ids, out_dist, out_flag, min(r, m), m))
+    return Graph(*row_topk(out_ids, out_dist, out_flag, min(r, m), m))
 
 
 # ------------------------------------------------------------- public merges

@@ -44,15 +44,16 @@ def random_init(key: jax.Array, x: jnp.ndarray, cfg: NNDescentConfig) -> G.Graph
     return G.random_init_graph(key, x, cfg.s, cfg.k, cfg.metric)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def join_and_update(x: jnp.ndarray, g: G.Graph, cfg: NNDescentConfig) -> G.Graph:
-    """One NN-Descent iteration: local join (Alg. 2) + top-K merge."""
-    n, m = g.neighbors.shape
-    j = min(cfg.sample or m, m)          # join width
-    ids = g.neighbors[:, :j]             # rows sorted => nearest-j joined
-    flags = g.flags[:, :j]
-    chunk = min(cfg.chunk, n)
-    pad = (-n) % chunk
+def join_candidates(
+    x: jnp.ndarray, ids: jnp.ndarray, flags: jnp.ndarray, cfg: NNDescentConfig,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Chunked local-join over a block of rows (the whole graph or one
+    shard's rows — per-row computation, so any row partition yields bitwise
+    identical candidates). ``ids``/``flags`` are already sliced to the join
+    width j; returns flat (src, dst, dist) candidate edge lists."""
+    n_rows, j = ids.shape
+    chunk = min(cfg.chunk, n_rows)
+    pad = (-n_rows) % chunk
     ids_p = jnp.pad(ids, ((0, pad), (0, 0)), constant_values=-1)
     flags_p = jnp.pad(flags, ((0, pad), (0, 0)), constant_values=G.OLD)
 
@@ -72,22 +73,46 @@ def join_and_update(x: jnp.ndarray, g: G.Graph, cfg: NNDescentConfig) -> G.Graph
     src, dst, dist = jax.lax.map(
         one_chunk, (ids_p.reshape(-1, chunk, j), flags_p.reshape(-1, chunk, j))
     )
+    # chunk-padding rows emit only invalid (-1) candidates, which every merge
+    # path drops — safe to leave in the flat lists
+    return src.reshape(-1), dst.reshape(-1), dist.reshape(-1)
+
+
+def default_join_buckets(cfg: NNDescentConfig, capacity: int) -> int:
+    """Bucket width for the join flood: the local join floods ~j^2 candidates
+    per destination row (vs ~M redirects in rnn_descent), so buckets scale
+    with j^2 — clamped so the scatter state stays bounded at large K
+    (collision drops beyond the clamp only slow convergence, never corrupt
+    rows). Shared with the sharded build so both paths size identically."""
+    if cfg.n_buckets is not None:
+        return cfg.n_buckets
+    j = min(cfg.sample or capacity, capacity)
+    return min(G.default_buckets(j * j), 2048)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def join_and_update(x: jnp.ndarray, g: G.Graph, cfg: NNDescentConfig) -> G.Graph:
+    """One NN-Descent iteration: local join (Alg. 2) + top-K merge."""
+    n, m = g.neighbors.shape
+    j = min(cfg.sample or m, m)          # join width
+    src, dst, dist = join_candidates(
+        x, g.neighbors[:, :j], g.flags[:, :j], cfg  # rows sorted => nearest-j
+    )
     # Alg. 2 L7: all joined vertices become "old" before new candidates land.
     aged = G.Graph(g.neighbors, g.dists, jnp.zeros_like(g.flags))
-    nb = cfg.n_buckets
-    if nb is None:
-        # the local join floods ~j^2 candidates per destination row (vs ~M
-        # redirects in rnn_descent), so buckets scale with j^2 — clamped so
-        # the scatter state stays bounded at large K (collision drops beyond
-        # the clamp only slow convergence, never corrupt rows)
-        nb = min(G.default_buckets(j * j), 2048)
     return G.merge_candidate_edges(
-        aged, src.reshape(-1), dst.reshape(-1), dist.reshape(-1), cap=cfg.k,
-        merge=cfg.merge, n_buckets=nb,
+        aged, src, dst, dist, cap=cfg.k,
+        merge=cfg.merge, n_buckets=default_join_buckets(cfg, m),
     )
 
 
-def build(x: jnp.ndarray, cfg: NNDescentConfig, key: jax.Array) -> G.Graph:
+def build(x: jnp.ndarray, cfg: NNDescentConfig, key: jax.Array,
+          mesh=None) -> G.Graph:
+    """``mesh``: route through the multi-device sharded build (core/shard.py
+    — rows partitioned via shard_map, bitwise-identical to ``mesh=None``)."""
+    if mesh is not None:
+        from repro.core import shard
+        return shard.build_nn_descent(x, cfg, key, mesh)
     g = random_init(key, x, cfg)
     for _ in range(cfg.iters):
         g = join_and_update(x, g, cfg)

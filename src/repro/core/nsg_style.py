@@ -84,13 +84,23 @@ def ensure_reachable(
 
 def expand_candidates(
     x: jnp.ndarray, g: G.Graph, c: int, metric: str = "l2", chunk: int = 256,
+    rows: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """NSG candidate acquisition, vectorized: pool = own row ∪ 2-hop rows,
     deduped, nearest-``c`` kept. (Real NSG gathers the pool by running a
     search per vertex; the 2-hop pool is the descent-style equivalent with
-    identical width C and no ANNS dependency.)"""
+    identical width C and no ANNS dependency.)
+
+    ``rows``: optional (R,) vertex-id block to expand (-1 entries yield empty
+    rows) — defaults to every vertex. The per-row computation only reads
+    ``g`` through gathers, so a shard can expand its own rows against the
+    replicated graph with bitwise-identical results (core/shard.py)."""
     n, k = g.neighbors.shape
-    pad = (-n) % chunk
+    rows_given = rows is not None
+    if rows is None:
+        rows = jnp.arange(n, dtype=jnp.int32)
+    n_rows = rows.shape[0]
+    pad = (-n_rows) % chunk
 
     def one_chunk(args):
         cid, base = args                                    # (C0, k), (C0,)
@@ -113,33 +123,52 @@ def expand_candidates(
         ids = jnp.take_along_axis(pool_sorted, order, axis=1)
         return jnp.where(jnp.isfinite(-neg), ids, -1), -neg
 
-    base = jnp.arange(n, dtype=jnp.int32)
-    ids_p = jnp.pad(g.neighbors, ((0, pad), (0, 0)), constant_values=-1)
-    base_p = jnp.pad(base, (0, pad), constant_values=-1)
+    base_p = jnp.pad(rows, (0, pad), constant_values=-1)
+    if rows_given:
+        ids_p = jnp.where(
+            base_p[:, None] >= 0, g.neighbors[jnp.maximum(base_p, 0)], -1
+        )
+    else:  # rows == arange(n): skip the gather, pad is free
+        ids_p = jnp.pad(g.neighbors, ((0, pad), (0, 0)), constant_values=-1)
     ids, dists = jax.lax.map(
         one_chunk, (ids_p.reshape(-1, chunk, k), base_p.reshape(-1, chunk))
     )
-    return ids.reshape(-1, c)[:n], dists.reshape(-1, c)[:n]
+    return ids.reshape(-1, c)[:n_rows], dists.reshape(-1, c)[:n_rows]
 
 
-def build(x: jnp.ndarray, cfg: NSGStyleConfig, key: jax.Array,
-          entry: int | jnp.ndarray | None = None) -> G.Graph:
-    knn_g = nnd.build(x, cfg.knn, key)
-    cand_ids, cand_d = expand_candidates(x, knn_g, cfg.c, cfg.metric, cfg.chunk)
+def rng_cap_rows(
+    x: jnp.ndarray, cand_ids: jnp.ndarray, cand_d: jnp.ndarray,
+    cfg: NSGStyleConfig,
+) -> G.Graph:
+    """RNG-prune expanded candidate rows (Alg. 3) and cap out-degree at R.
+    Per-row — shared by the single-device and sharded (core/shard.py) builds
+    so both paths stay bitwise identical."""
     keep = rng_prune_rows(x, cand_ids, cand_d, cfg.metric)
     pruned = G.sort_rows(
         G.Graph(
             neighbors=jnp.where(keep, cand_ids, -1),
             dists=jnp.where(keep, cand_d, jnp.inf),
-            flags=jnp.zeros((cand_ids.shape[0], cfg.c), jnp.uint8),
+            flags=jnp.zeros(cand_ids.shape, jnp.uint8),
         )
     )
-    # out-degree cap R, then reverse edges capped at R (NSG's final step)
-    capped = G.Graph(
+    return G.Graph(
         neighbors=pruned.neighbors.at[:, cfg.r:].set(-1),
         dists=pruned.dists.at[:, cfg.r:].set(jnp.inf),
         flags=pruned.flags,
     )
+
+
+def build(x: jnp.ndarray, cfg: NSGStyleConfig, key: jax.Array,
+          entry: int | jnp.ndarray | None = None, mesh=None) -> G.Graph:
+    """``mesh``: route through the multi-device sharded build (core/shard.py
+    — rows partitioned via shard_map, bitwise-identical to ``mesh=None``)."""
+    if mesh is not None:
+        from repro.core import shard
+        return shard.build_nsg_style(x, cfg, key, mesh, entry=entry)
+    knn_g = nnd.build(x, cfg.knn, key)
+    cand_ids, cand_d = expand_candidates(x, knn_g, cfg.c, cfg.metric, cfg.chunk)
+    capped = rng_cap_rows(x, cand_ids, cand_d, cfg)
+    # reverse edges capped at R (NSG's final step)
     g = G.add_reverse_edges(capped, cfg.r, merge=cfg.merge, n_buckets=cfg.n_buckets)
     if entry is None:
         from repro.core.search import default_entry_point

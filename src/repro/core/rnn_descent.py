@@ -77,6 +77,36 @@ def _fused_prune_chunk(x, cid, cdist, cflag, metric, use_pallas, gram_dtype="f32
     return res.keep, res.redirect_w, res.redirect_d
 
 
+def prune_rows(
+    x: jnp.ndarray, ids: jnp.ndarray, dists: jnp.ndarray, flags: jnp.ndarray,
+    cfg: RNNDescentConfig,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Chunked fused prune over a block of adjacency rows (the whole graph or
+    one shard's rows — the computation is per-row, so any row partition gives
+    bitwise-identical per-row results). Returns (keep, red_w, red_d)."""
+    n_rows, m = ids.shape
+    chunk = min(cfg.chunk, n_rows)
+    pad = (-n_rows) % chunk
+    ids = jnp.pad(ids, ((0, pad), (0, 0)), constant_values=-1)
+    dists = jnp.pad(dists, ((0, pad), (0, 0)), constant_values=jnp.inf)
+    flags = jnp.pad(flags, ((0, pad), (0, 0)), constant_values=G.OLD)
+
+    def one_chunk(args):
+        cid, cdist, cflag = args
+        return _fused_prune_chunk(x, cid, cdist, cflag, cfg.metric,
+                                  cfg.use_pallas, cfg.gram_dtype)
+
+    keep, red_w, red_d = jax.lax.map(
+        one_chunk,
+        (ids.reshape(-1, chunk, m), dists.reshape(-1, chunk, m), flags.reshape(-1, chunk, m)),
+    )
+    return (
+        keep.reshape(-1, m)[:n_rows],
+        red_w.reshape(-1, m)[:n_rows],
+        red_d.reshape(-1, m)[:n_rows],
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def update_neighbors(x: jnp.ndarray, g: G.Graph, cfg: RNNDescentConfig) -> G.Graph:
     """Paper Algorithm 4, one parallel sweep over all vertices.
@@ -88,25 +118,7 @@ def update_neighbors(x: jnp.ndarray, g: G.Graph, cfg: RNNDescentConfig) -> G.Gra
         simultaneous "NN-Descent join" that keeps v reachable from u via w;
       * kept entries become "old"; replacement edges are inserted "new".
     """
-    n, m = g.neighbors.shape
-    chunk = min(cfg.chunk, n)
-    pad = (-n) % chunk
-    ids = jnp.pad(g.neighbors, ((0, pad), (0, 0)), constant_values=-1)
-    dists = jnp.pad(g.dists, ((0, pad), (0, 0)), constant_values=jnp.inf)
-    flags = jnp.pad(g.flags, ((0, pad), (0, 0)), constant_values=G.OLD)
-
-    def one_chunk(args):
-        cid, cdist, cflag = args
-        return _fused_prune_chunk(x, cid, cdist, cflag, cfg.metric,
-                                  cfg.use_pallas, cfg.gram_dtype)
-
-    keep, red_w, red_d = jax.lax.map(
-        one_chunk,
-        (ids.reshape(-1, chunk, m), dists.reshape(-1, chunk, m), flags.reshape(-1, chunk, m)),
-    )
-    keep = keep.reshape(-1, m)[:n]
-    red_w = red_w.reshape(-1, m)[:n]
-    red_d = red_d.reshape(-1, m)[:n]
+    keep, red_w, red_d = prune_rows(x, g.neighbors, g.dists, g.flags, cfg)
 
     # Surviving adjacency: kept entries, flags forced to "old" (Alg. 4 L16).
     pruned = G.Graph(
@@ -132,8 +144,18 @@ def add_reverse_edges(g: G.Graph, cfg: RNNDescentConfig) -> G.Graph:
     return G.add_reverse_edges(g, cfg.r, merge=cfg.merge, n_buckets=cfg.n_buckets)
 
 
-def build(x: jnp.ndarray, cfg: RNNDescentConfig, key: jax.Array) -> G.Graph:
-    """Paper Algorithm 6 — eager Python loop (CPU experimentation path)."""
+def build(x: jnp.ndarray, cfg: RNNDescentConfig, key: jax.Array,
+          mesh=None) -> G.Graph:
+    """Paper Algorithm 6 — eager Python loop (CPU experimentation path).
+
+    ``mesh``: a ``jax.sharding.Mesh`` routes the build through the
+    multi-device sharded path (core/shard.py): graph rows partitioned across
+    the mesh's "rows" logical axis via shard_map, x replicated, bucket tables
+    exchanged between shards. Bitwise-identical to ``mesh=None`` (asserted in
+    tests/test_sharded_parity.py)."""
+    if mesh is not None:
+        from repro.core import shard
+        return shard.build_rnn_descent(x, cfg, key, mesh)
     g = random_init(key, x, cfg)
     for t1 in range(cfg.t1):
         for _ in range(cfg.t2):

@@ -352,7 +352,7 @@ def search(
     return _search_impl(x, g, queries, eps, cfg)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "tile_b"))
+@functools.partial(jax.jit, static_argnames=("cfg", "tile_b", "mesh"))
 def search_tiled(
     x: jnp.ndarray,
     g: G.Graph,
@@ -360,6 +360,7 @@ def search_tiled(
     entry_points: jnp.ndarray,
     cfg: SearchConfig,
     tile_b: int = 256,
+    mesh=None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Stream an arbitrary query count through B_tile-sized ``lax.map`` tiles.
 
@@ -367,19 +368,56 @@ def search_tiled(
     memory is O(tile_b * slots) — independent of both the total batch size
     and (in hashed mode) the corpus size. Results match :func:`search`
     exactly; lanes in a finished tile never block lanes in another tile.
+
+    ``mesh``: a ``jax.sharding.Mesh`` shards the query *tiles* across the
+    mesh axes the logical ``"queries"`` axis resolves to (RULES in
+    distributed/sharding.py), with corpus and graph replicated per device —
+    each device streams its own tile subset, so throughput scales with the
+    device count while per-device visited memory stays O(tile_b * slots).
+    Lanes are independent and tile shapes are unchanged, so sharded results
+    are exactly equal (ids and dist bits) to ``mesh=None`` — asserted in
+    tests/test_sharded_parity.py — and the path composes with both
+    ``visited`` modes and ``use_pallas``.
     """
     b = queries.shape[0]
     eps = _validate_entry_points(entry_points, b, cfg.l)
     tile_b = min(tile_b, b) if b > 0 else 1   # b=0 -> zero tiles, empty result
-    pad = (-b) % tile_b
+    qaxes: tuple = ()
+    n_dev = 1
+    if mesh is not None and b > 0:
+        from repro.distributed import sharding as SH
+        qaxes = SH.mesh_axes(mesh, "queries")
+        n_dev = SH.axis_count(mesh, "queries")
+    # pad the tile count to the device count: padded lanes recompute the
+    # first entry point against a zero query and are sliced off
+    pad = (-b) % (tile_b * n_dev)
     q_p = jnp.pad(queries, ((0, pad), (0, 0)))
     eps_p = jnp.concatenate([eps, jnp.broadcast_to(eps[:1], (pad, eps.shape[1]))]) \
         if pad else eps
     q_tiles = q_p.reshape(-1, tile_b, queries.shape[1])
     ep_tiles = eps_p.reshape(-1, tile_b, eps.shape[1])
-    ids, dists = jax.lax.map(
-        lambda t: _search_impl(x, g, t[0], t[1], cfg), (q_tiles, ep_tiles)
-    )
+
+    def tiles_body(xx, gg, qt, et):
+        return jax.lax.map(
+            lambda t: _search_impl(xx, gg, t[0], t[1], cfg), (qt, et)
+        )
+
+    if qaxes:
+        # taken whenever the mesh routes a "queries" axis — including a
+        # 1-wide mesh, so single-device runs still exercise the real
+        # shard_map dispatch (the 1-device CI smoke relies on this)
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        qspec = SH.pspec(mesh, "queries", None, None)
+        rep = G.Graph(P(), P(), P())
+        ids, dists = shard_map(
+            tiles_body, mesh=mesh,
+            in_specs=(P(), rep, qspec, qspec),
+            out_specs=(qspec, qspec),
+            check_rep=False,
+        )(x, g, q_tiles, ep_tiles)
+    else:
+        ids, dists = tiles_body(x, g, q_tiles, ep_tiles)
     return ids.reshape(-1, cfg.topk)[:b], dists.reshape(-1, cfg.topk)[:b]
 
 

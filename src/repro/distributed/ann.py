@@ -1,0 +1,136 @@
+"""Mesh-aware ANN index service: sharded build, sharded serving, elastic
+persistence.
+
+The thin operational layer over core/: one object owns the corpus, the built
+graph, and the mesh, and routes every operation through the sharded paths
+when a mesh is present (build -> core/shard.py row-sharded construction;
+search -> core/search.py query-tile sharding) or the plain single-device
+paths when it is not — with *identical* results either way (the core
+contracts asserted in tests/test_sharded_parity.py).
+
+Persistence goes through checkpoint/ (atomic-commit npz shards): the graph is
+saved as host arrays and restored onto whatever mesh the new job runs —
+save on an 8-way mesh, restore on 2-way or single-device
+(``launch/mesh.make_mesh`` builds the target) and serve the same results,
+asserted in tests/test_index_persistence.py. Row placement on restore is
+best-effort: rows shard across the mesh when the row count divides the shard
+count, and fall back to replication otherwise (search only needs the graph
+readable; construction re-pads internally).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import checkpoint
+from repro.core import graph as G
+from repro.core import search as S
+from repro.distributed import sharding as SH
+
+METHODS = ("rnn-descent", "nn-descent", "nsg-style")
+
+
+def _default_cfg(method: str):
+    if method == "rnn-descent":
+        from repro.core.rnn_descent import RNNDescentConfig
+        return RNNDescentConfig()
+    if method == "nn-descent":
+        from repro.core.nn_descent import NNDescentConfig
+        return NNDescentConfig()
+    if method == "nsg-style":
+        from repro.core.nsg_style import NSGStyleConfig
+        return NSGStyleConfig()
+    raise ValueError(f"unknown method {method!r}: expected one of {METHODS}")
+
+
+def _build_fn(method: str):
+    if method == "rnn-descent":
+        from repro.core import rnn_descent as rd
+        return rd.build
+    if method == "nn-descent":
+        from repro.core import nn_descent as nnd
+        return nnd.build
+    from repro.core import nsg_style
+    return nsg_style.build
+
+
+def graph_sharding(mesh: Mesh, n: int) -> NamedSharding:
+    """Row sharding for an (n, M) graph field when ``n`` divides the mesh's
+    row-shard count; replicated otherwise (uneven row sharding is not
+    expressible as a NamedSharding). For *construction* state — serving
+    wants :func:`place_graph`'s replication instead."""
+    if n % max(SH.axis_count(mesh, "rows"), 1) == 0:
+        return NamedSharding(mesh, SH.pspec(mesh, "rows", None))
+    return NamedSharding(mesh, P())
+
+
+def place_graph(g: G.Graph, mesh: Mesh | None) -> G.Graph:
+    """Commit a graph to the mesh, *replicated*: sharded serving declares the
+    graph replicated per device (search_tiled's in_specs), so replicating
+    once at placement time beats row-sharding and paying an all-gather
+    inside every compiled search call."""
+    if mesh is None:
+        return g
+    s = NamedSharding(mesh, P())
+    return G.Graph(*(jax.device_put(jnp.asarray(np.asarray(a)), s) for a in g))
+
+
+@dataclasses.dataclass
+class ShardedANN:
+    """A built index bound to a (possibly absent) mesh.
+
+    >>> ann = ShardedANN.build(x, method="rnn-descent", mesh=mesh)
+    >>> ids, dists = ann.search(queries, S.SearchConfig(l=32, topk=10))
+    >>> ann.save("/ckpts/idx")                      # mesh-shape-independent
+    >>> ann2 = ShardedANN.restore("/ckpts/idx", x, mesh=other_mesh)
+    """
+
+    x: jnp.ndarray
+    graph: G.Graph
+    mesh: Mesh | None = None
+    method: str = "rnn-descent"
+    build_cfg: Any = None
+
+    @classmethod
+    def build(cls, x, method: str = "rnn-descent", cfg=None,
+              key: jax.Array | None = None, mesh: Mesh | None = None,
+              ) -> "ShardedANN":
+        """Construct the index — row-sharded over ``mesh`` when given."""
+        cfg = cfg if cfg is not None else _default_cfg(method)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        g = _build_fn(method)(x, cfg, key, mesh=mesh)
+        return cls(x=x, graph=g, mesh=mesh, method=method, build_cfg=cfg)
+
+    def search(self, queries, cfg: S.SearchConfig | None = None,
+               entry_points=None, tile_b: int = 256):
+        """Serve through the tiled driver; query tiles shard over the mesh."""
+        cfg = cfg if cfg is not None else S.SearchConfig()
+        if entry_points is None:
+            entry_points = S.default_entry_point(self.x, cfg.metric)
+        return S.search_tiled(self.x, self.graph, queries, entry_points,
+                              cfg, tile_b=tile_b, mesh=self.mesh)
+
+    # ------------------------------------------------------------ persistence
+    def save(self, ckpt_dir: str, step: int = 0) -> None:
+        """Atomic-commit save of the graph (host arrays — mesh-agnostic)."""
+        checkpoint.save(ckpt_dir, step, self.graph)
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, x, mesh: Mesh | None = None,
+                step: int | None = None, method: str = "rnn-descent",
+                ) -> "ShardedANN":
+        """Elastic restore: load the committed graph and place it on
+        ``mesh`` (any shape — need not match the mesh it was saved from)."""
+        if step is None:
+            step = checkpoint.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+        like = G.Graph(neighbors=0, dists=0, flags=0)  # treedef only
+        g = checkpoint.restore(ckpt_dir, step, like)
+        g = G.Graph(*(jnp.asarray(a) for a in g))
+        return cls(x=x, graph=place_graph(g, mesh), mesh=mesh, method=method)

@@ -17,6 +17,20 @@ Train-step scheme (DESIGN.md §2/§5):
   * expert d_ff      -> data                   2D-sharded expert blocks
   * edges/candidates -> (data, model)          flat 256-way for GNN/retrieval
   * table rows       -> (data, model)          recsys embedding row sharding
+
+ANN index scheme (core/shard.py + core/search.py — the RNN-Descent path):
+  * rows             -> data (+pod)            graph adjacency rows during
+                                               sharded construction; x stays
+                                               replicated, shards exchange
+                                               bucket tables (min-reduce)
+  * queries          -> data (+pod)            query tiles during sharded
+                                               serving; corpus + graph
+                                               replicated per device
+
+Contract note: this table documents exactly the logical axes the code
+annotates. Axes that drifted out of use ("heads", "expert_cap" — nothing
+maps them anymore) have been pruned; an unknown logical name resolves to
+replicated, so pruning is behavior-preserving.
 """
 from __future__ import annotations
 
@@ -30,14 +44,12 @@ RULES: dict[str, object] = {
     "batch": "data",
     "seq": "model",          # sequence-parallel activations between blocks
     "seq_kv": None,          # gathered KV inside attention
-    "heads": None,
     "kv_heads": None,
     "d_head": None,
     "d_model": None,
     "d_ff": "model",
     "vocab": "model",
     "experts": "model",
-    "expert_cap": "data",    # MoE token buffer: (E@model, C@data, d)
     "tokens_flat": ("data", "model"),   # flattened (B@data, S@model) tokens
     "layers": None,
     "edges": "data",         # GNN edge arrays (width goes on 'model')
@@ -54,6 +66,9 @@ RULES: dict[str, object] = {
     "cache_seq_flat": ("data", "model"),
     "mlp_hidden": None,
     "none": None,
+    # --- ANN index axes (sharded construction + serving) ---
+    "rows": "data",          # graph adjacency rows (sharded build)
+    "queries": "data",       # query tiles (sharded serving)
 }
 
 
@@ -69,6 +84,23 @@ def physical_axes(mesh: Mesh, logical: str):
     if "data" in present and "pod" in mesh.axis_names:
         present = ("pod",) + present
     return present if len(present) > 1 else present[0]
+
+
+def mesh_axes(mesh: Mesh, logical: str) -> tuple[str, ...]:
+    """Physical mesh axis names a logical axis resolves to on ``mesh``, as a
+    tuple (empty = replicated). The form shard_map collectives want."""
+    ax = physical_axes(mesh, logical)
+    if ax is None:
+        return ()
+    return ax if isinstance(ax, tuple) else (ax,)
+
+
+def axis_count(mesh: Mesh, logical: str) -> int:
+    """Number of shards a logical axis splits into on ``mesh`` (1 = replicated)."""
+    count = 1
+    for a in mesh_axes(mesh, logical):
+        count *= mesh.shape[a]
+    return count
 
 
 def pspec(mesh: Mesh, *logical: str | None) -> P:

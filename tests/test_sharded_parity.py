@@ -1,0 +1,173 @@
+"""Sharded (shard_map) construction + serving vs the single-device oracles.
+
+The contract under test (core/shard.py + core/search.py ``mesh=``): sharded
+results are **exactly equal** — same int32 neighbor ids, same uint32
+dist_keys, same flags — to the single-device build/search with the same
+config. No tolerance, no canonicalization.
+
+These tests run on whatever devices exist: under plain tier-1 (one CPU
+device) they exercise the complete sharded code path — row padding,
+full-height partial tables, the all_to_all reduce-scatter-min exchange — on
+a 1-device mesh; the CI mesh job re-runs them with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the exchange
+really crosses 8 shards. The corpus size (700) is deliberately not divisible
+by 2, 4, or 8, so multi-device runs always exercise the inert row padding.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core import nn_descent as nnd
+from repro.core import nsg_style
+from repro.core import rnn_descent as rd
+from repro.core import search as S
+from repro.core import shard
+from repro.data.synthetic import VectorDatasetSpec, clustered_vectors
+from repro.distributed import sharding as SH
+
+N = 700                    # 700 % 8 == 4: row padding always active at 8 dev
+METRICS = ("l2", "ip", "cos")
+KEY = jax.random.PRNGKey(1)
+
+
+def _rnn_cfg(metric):
+    return rd.RNNDescentConfig(s=8, r=16, t1=2, t2=2, capacity=24,
+                               chunk=128, metric=metric)
+
+
+def _nn_cfg(metric):
+    return nnd.NNDescentConfig(k=16, s=8, iters=3, chunk=96, metric=metric)
+
+
+def _nsg_cfg(metric):
+    return nsg_style.NSGStyleConfig(r=8, c=24, metric=metric,
+                                    knn=_nn_cfg(metric))
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((jax.device_count(),), ("data",))
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    x, q = clustered_vectors(
+        jax.random.PRNGKey(0),
+        VectorDatasetSpec("shard", n=N, d=24, n_queries=101, n_clusters=8),
+    )
+    return x, q
+
+
+@pytest.fixture(scope="module")
+def rnn_graph(corpus):
+    x, _ = corpus
+    return rd.build(x, _rnn_cfg("l2"), KEY)
+
+
+def assert_graph_bitwise_equal(a: G.Graph, b: G.Graph):
+    assert np.array_equal(np.asarray(a.neighbors), np.asarray(b.neighbors))
+    # distances compared as uint32 dist_keys: bit-exact, inf-safe
+    assert np.array_equal(np.asarray(G.dist_key(a.dists)),
+                          np.asarray(G.dist_key(b.dists)))
+    assert np.array_equal(np.asarray(a.flags), np.asarray(b.flags))
+
+
+# ------------------------------------------------------------- construction
+@pytest.mark.parametrize("metric", METRICS)
+def test_rnn_descent_sharded_parity(corpus, mesh, metric):
+    x, _ = corpus
+    cfg = _rnn_cfg(metric)
+    assert_graph_bitwise_equal(
+        rd.build(x, cfg, KEY), rd.build(x, cfg, KEY, mesh=mesh))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_nn_descent_sharded_parity(corpus, mesh, metric):
+    x, _ = corpus
+    cfg = _nn_cfg(metric)
+    assert_graph_bitwise_equal(
+        nnd.build(x, cfg, KEY), nnd.build(x, cfg, KEY, mesh=mesh))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_nsg_style_sharded_parity(corpus, mesh, metric):
+    x, _ = corpus
+    cfg = _nsg_cfg(metric)
+    assert_graph_bitwise_equal(
+        nsg_style.build(x, cfg, KEY), nsg_style.build(x, cfg, KEY, mesh=mesh))
+
+
+def test_divisible_row_count_parity(mesh):
+    """n an exact multiple of the shard count: no padding path at all."""
+    n = 16 * jax.device_count()
+    x = jax.random.normal(jax.random.PRNGKey(3), (n, 16))
+    cfg = rd.RNNDescentConfig(s=6, r=10, t1=2, t2=2, capacity=16, chunk=64)
+    assert_graph_bitwise_equal(
+        rd.build(x, cfg, KEY), rd.build(x, cfg, KEY, mesh=mesh))
+
+
+def test_sharded_build_requires_bucketed_merge(corpus, mesh):
+    x, _ = corpus
+    cfg = rd.RNNDescentConfig(s=8, r=16, t1=2, t2=2, capacity=24, merge="sort")
+    with pytest.raises(ValueError, match="bucketed"):
+        rd.build(x, cfg, KEY, mesh=mesh)
+
+
+def test_mesh_resolves_ann_axes(mesh):
+    """RULES must route both ANN logical axes onto the mesh."""
+    assert SH.axis_count(mesh, "rows") == jax.device_count()
+    assert SH.axis_count(mesh, "queries") == jax.device_count()
+    assert shard.row_axes(mesh) == ("data",)
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="the 8-shard exchange needs the CI mesh job "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+def test_exchange_really_crosses_eight_shards(mesh):
+    assert shard.n_shards(mesh) == 8
+
+
+# ------------------------------------------------------------------ serving
+@pytest.mark.parametrize("visited", ("hashed", "dense"))
+@pytest.mark.parametrize("use_pallas", (False, True))
+def test_search_tiled_sharded_parity(corpus, mesh, rnn_graph, visited,
+                                     use_pallas):
+    """Sharded query-tile serving == unsharded, ids and dist bits, for both
+    visited modes and both beam inner-loop implementations. The query count
+    (101) divides neither tile_b nor the device count."""
+    x, q = corpus
+    cfg = S.SearchConfig(l=16, k=12, max_iters=48, topk=5,
+                         visited=visited, use_pallas=use_pallas)
+    ep = S.default_entry_point(x)
+    ids_1, d_1 = S.search_tiled(x, rnn_graph, q, ep, cfg, tile_b=16)
+    ids_m, d_m = S.search_tiled(x, rnn_graph, q, ep, cfg, tile_b=16,
+                                mesh=mesh)
+    assert np.array_equal(np.asarray(ids_1), np.asarray(ids_m))
+    assert np.array_equal(np.asarray(G.dist_key(d_1)),
+                          np.asarray(G.dist_key(d_m)))
+
+
+def test_search_sharded_multi_entry(corpus, mesh, rnn_graph):
+    x, q = corpus
+    cfg = S.SearchConfig(l=16, k=12, max_iters=48, topk=3)
+    eps = jnp.broadcast_to(
+        S.default_entry_points(x, n_entries=3)[None, :], (q.shape[0], 3))
+    ids_1, d_1 = S.search_tiled(x, rnn_graph, q, eps, cfg, tile_b=32)
+    ids_m, d_m = S.search_tiled(x, rnn_graph, q, eps, cfg, tile_b=32,
+                                mesh=mesh)
+    assert np.array_equal(np.asarray(ids_1), np.asarray(ids_m))
+    assert np.array_equal(np.asarray(G.dist_key(d_1)),
+                          np.asarray(G.dist_key(d_m)))
+
+
+def test_search_sharded_tiny_batch(corpus, mesh, rnn_graph):
+    """Batch smaller than one tile per device: heavy pad, results intact."""
+    x, q = corpus
+    cfg = S.SearchConfig(l=8, k=8, max_iters=24, topk=2)
+    qq = q[:3]
+    ep = S.default_entry_point(x)
+    ids_1, _ = S.search_tiled(x, rnn_graph, qq, ep, cfg, tile_b=64)
+    ids_m, _ = S.search_tiled(x, rnn_graph, qq, ep, cfg, tile_b=64, mesh=mesh)
+    assert np.array_equal(np.asarray(ids_1), np.asarray(ids_m))

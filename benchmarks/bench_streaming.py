@@ -1,0 +1,256 @@
+"""Streaming index trajectory: churn quality + update throughput + locality.
+
+Claims validated (repo-root BENCH_streaming.json, committed across PRs; the
+CI smoke asserts the quality/locality bits and records the throughputs):
+
+  * **churn quality** — after a schedule that inserts >= 30% new points and
+    deletes >= 20% of the originals in interleaved batches, the streaming
+    index's recall@10 on the survivors is within 0.02 of a from-scratch
+    rebuild on exactly those points (``recall_stream`` vs ``recall_rebuild``);
+  * **insert locality** — insert cost scales with the *batch*, not the
+    corpus: the same batch inserted into a ~4x larger corpus costs about the
+    same (``seconds_ratio`` in the scaling rows; the frontier is
+    B * (1 + seed_k) rows regardless of n);
+  * **sharded parity** — one insert + delete batch through the mesh over
+    every visible device is bitwise equal to single-device (the ``parity``
+    flag, asserted in the CI mesh job), and the full churn schedule runs
+    sharded for the throughput trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+
+def _streaming_cfg():
+    from repro.streaming import StreamingConfig
+
+    if common.BENCH_SMOKE:
+        return StreamingConfig(build=common.RNND_CFG, seed_l=32, seed_k=16,
+                               seed_iters=64, batch_k=4, sweeps=2,
+                               splice_k=6)
+    return StreamingConfig(build=common.RNND_CFG, seed_l=48, seed_k=24,
+                           seed_iters=96, batch_k=8, sweeps=2, splice_k=8)
+
+
+def _churn_dataset():
+    import jax
+
+    from repro.data.synthetic import VectorDatasetSpec, clustered_vectors
+
+    if common.BENCH_SMOKE:
+        spec = VectorDatasetSpec("smoke", n=1560, d=48, n_queries=100,
+                                 n_clusters=16)
+    else:
+        spec = VectorDatasetSpec("sift-like", n=7800, d=128, n_queries=400,
+                                 n_clusters=48)
+    x, q = clustered_vectors(jax.random.PRNGKey(0), spec)
+    return spec.name, np.asarray(x), q
+
+
+def _update_root(**sections) -> None:
+    """Merge row sections into the repo-root BENCH_streaming.json (same
+    per-section smoke-flag convention as BENCH_search.json)."""
+    path = os.path.join(common.ROOT_DIR, "BENCH_streaming.json")
+    payload = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            payload = {}
+    payload.update({"bench": "streaming",
+                    "subsystem": "src/repro/streaming (insert/delete/compact "
+                                 "with tombstone-aware serving)"})
+    for name, rows_ in sections.items():
+        payload[name] = rows_
+        payload[name + "_smoke"] = common.BENCH_SMOKE
+    common.save_root_json("BENCH_streaming.json", payload)
+
+
+def churn_rows(mesh=None) -> list[dict]:
+    """Run the acceptance churn schedule (interleaved: +~15% insert, -10%
+    delete, +~17% insert, -12% delete => >=30% inserted, >=22% of originals
+    deleted) and score survivors against a from-scratch rebuild."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import eval as E
+    from repro.core import rnn_descent as rd
+    from repro.core import search as S
+    from repro.streaming import StreamingANN
+    from repro.streaming import store as ST
+
+    ds, x, q = _churn_dataset()
+    cfg = _streaming_cfg()
+    n0 = int(x.shape[0] / 1.3)               # reserve 30% of the pool to insert
+    devices = jax.device_count() if mesh is not None else 1
+    scfg = S.SearchConfig(l=48, k=32, max_iters=128, topk=10)
+
+    t0 = time.perf_counter()
+    ann = StreamingANN.from_corpus(x[:n0], cfg, key=jax.random.PRNGKey(1),
+                                   mesh=mesh)
+    jax.block_until_ready(ann.store.graph.neighbors)  # async dispatch!
+    build_sec = time.perf_counter() - t0
+
+    extra = x[n0:]
+    half = extra.shape[0] // 2
+    del_a = np.arange(0, n0 // 10)
+    del_b = np.arange(n0 // 10, n0 // 10 + n0 // 8)
+    ins_sec = del_sec = 0.0
+    ins_pts = del_pts = 0
+    for op, arg in (("ins", extra[:half]), ("del", del_a),
+                    ("ins", extra[half:]), ("del", del_b)):
+        t0 = time.perf_counter()
+        if op == "ins":
+            ann.insert(arg)
+            jax.block_until_ready(ann.store.graph.neighbors)
+            ins_sec += time.perf_counter() - t0
+            ins_pts += arg.shape[0]
+        else:
+            ann.delete(arg)
+            jax.block_until_ready(ann.store.graph.neighbors)
+            del_sec += time.perf_counter() - t0
+            del_pts += arg.shape[0]
+
+    st = ann.store
+    valid = ST.active_mask(st)
+    gt_d, gt_i = E.ground_truth(st.x, q, k=10, valid=valid)
+    ids, _ = ann.search(q, scfg)
+    r_stream = E.recall_topk(ids, gt_i, valid=valid)
+
+    surv = np.asarray(st.x)[np.asarray(valid)]
+    t0 = time.perf_counter()
+    g_reb = jax.block_until_ready(
+        rd.build(jnp.asarray(surv), cfg.build, jax.random.PRNGKey(2)))
+    rebuild_sec = time.perf_counter() - t0
+    ep = S.default_entry_point(jnp.asarray(surv))
+    ids_r, _ = S.search_tiled(jnp.asarray(surv), g_reb, q, ep, scfg,
+                              tile_b=256)
+    gt_rd, gt_ri = E.ground_truth(jnp.asarray(surv), q, k=10)
+    r_rebuild = E.recall_topk(ids_r, gt_ri)
+
+    row = {
+        "bench": "streaming-churn", "dataset": ds, "devices": devices,
+        "n_start": n0, "inserted": ins_pts, "deleted": del_pts,
+        "survivors": int(surv.shape[0]), "epochs": ann.epoch,
+        "build_seconds": round(build_sec, 3),
+        "insert_pps": round(ins_pts / max(ins_sec, 1e-9), 1),
+        "delete_pps": round(del_pts / max(del_sec, 1e-9), 1),
+        "recall_stream": round(r_stream, 4),
+        "recall_rebuild": round(r_rebuild, 4),
+        "rebuild_seconds": round(rebuild_sec, 3),
+        "within_floor": bool(r_stream >= r_rebuild - 0.02),
+    }
+    common.emit(
+        f"streaming/churn/{ds}/dev{devices}",
+        1e6 * ins_sec / max(ins_pts, 1),
+        f"insert_pps={row['insert_pps']},delete_pps={row['delete_pps']},"
+        f"recall_stream={row['recall_stream']},"
+        f"recall_rebuild={row['recall_rebuild']},"
+        f"within_floor={row['within_floor']}")
+    return [row]
+
+
+def scaling_rows() -> list[dict]:
+    """Insert the same batch into a small and a ~4x corpus: the seconds
+    ratio tracks the batch-local frontier, not the corpus."""
+    import jax
+
+    from repro.core import rnn_descent as rd
+    from repro.streaming import store as ST
+    from repro.streaming import updates as U
+    from repro.data.synthetic import VectorDatasetSpec, clustered_vectors
+
+    cfg = _streaming_cfg()
+    b = 64
+    sizes = (800, 3200) if common.BENCH_SMOKE else (2000, 8000)
+    rows, secs = [], []
+    for n in sizes:
+        x, _ = clustered_vectors(
+            jax.random.PRNGKey(0),
+            VectorDatasetSpec("scale", n=n + b, d=48, n_queries=10,
+                              n_clusters=16))
+        g = rd.build(x[:n], cfg.build, jax.random.PRNGKey(1))
+        st = ST.from_built(x[:n], g, capacity=n + b)
+        s2, _ = U.insert(st, x[n:], cfg)             # warm the compile cache
+        jax.block_until_ready(s2.graph.neighbors)
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            s2, _ = U.insert(st, x[n:], cfg)
+            jax.block_until_ready(s2.graph.neighbors)
+            best = min(best, time.perf_counter() - t0)
+        secs.append(best)
+        rows.append({"bench": "streaming-insert-scaling", "n": n,
+                     "batch": b, "seconds": round(best, 4)})
+    ratio = secs[1] / max(secs[0], 1e-9)
+    for r in rows:
+        r["seconds_ratio"] = round(ratio, 3)
+        r["corpus_ratio"] = round(sizes[1] / sizes[0], 2)
+    common.emit(
+        "streaming/insert-scaling", 1e6 * secs[-1],
+        f"batch={b},seconds_small={secs[0]:.4f},seconds_large={secs[1]:.4f},"
+        f"ratio={ratio:.3f} (corpus x{sizes[1] / sizes[0]:.0f})")
+    return rows
+
+
+def sharded_rows() -> list[dict]:
+    """Bitwise parity of one insert + delete batch through the mesh vs
+    single-device, plus the sharded churn throughput trajectory."""
+    import jax
+
+    from repro.core import rnn_descent as rd
+    from repro.streaming import store as ST
+    from repro.streaming import updates as U
+    from repro.data.synthetic import VectorDatasetSpec, clustered_vectors
+
+    mesh = common.ann_mesh()
+    devices = jax.device_count()
+    cfg = _streaming_cfg()
+    x, _ = clustered_vectors(
+        jax.random.PRNGKey(0),
+        VectorDatasetSpec("parity", n=1000, d=48, n_queries=10,
+                          n_clusters=16))
+    g = rd.build(x[:800], cfg.build, jax.random.PRNGKey(1))
+    st = ST.from_built(x[:800], g, capacity=1000)
+    s1, _ = U.insert(st, x[800:], cfg)
+    s8, _ = U.insert(st, x[800:], cfg, mesh=mesh)
+    d1 = U.delete(s1, np.arange(100, 260), cfg)
+    d8 = U.delete(s8, np.arange(100, 260), cfg, mesh=mesh)
+
+    def store_parity(a, b):
+        return bool(
+            common.graphs_equal(a.graph, b.graph)
+            and np.array_equal(np.asarray(a.x), np.asarray(b.x))
+            and np.array_equal(np.asarray(a.occupied), np.asarray(b.occupied))
+            and np.array_equal(np.asarray(a.tombstone),
+                               np.asarray(b.tombstone)))
+
+    rows = [{
+        "bench": "streaming-sharded-parity", "devices": devices,
+        "insert_parity": store_parity(s1, s8),
+        "delete_parity": store_parity(d1, d8),
+        "parity": store_parity(s1, s8) and store_parity(d1, d8),
+    }]
+    common.emit(
+        f"streaming/sharded-parity/dev{devices}", 0.0,
+        f"insert_parity={rows[0]['insert_parity']},"
+        f"delete_parity={rows[0]['delete_parity']}")
+    rows += churn_rows(mesh=mesh)
+    return rows
+
+
+def run() -> list[dict]:
+    churn = churn_rows()
+    scaling = scaling_rows()
+    sharded = sharded_rows()
+    _update_root(churn_rows=churn, scaling_rows=scaling,
+                 sharded_rows=sharded)
+    common.save_json("bench_streaming", churn + scaling + sharded)
+    return churn + scaling + sharded

@@ -52,6 +52,29 @@ saved index onto a *different* mesh shape and serve identical results.
 The demo below runs the sharded paths on whatever devices exist (1 on a
 plain CPU — still the full code path, degenerate exchange) and asserts
 build parity.
+
+Streaming updates
+-----------------
+Production corpora churn; ``repro.streaming`` maintains the index
+incrementally instead of rebuilding (the property RNN-Descent's direct
+construction uniquely enables — seeds for new rows come from beam-searching
+the current graph, and repair is the same prune/merge primitives run over a
+batch-sized frontier):
+
+    from repro.streaming import StreamingANN, StreamingConfig
+
+    ann = StreamingANN.from_corpus(x, StreamingConfig(build=cfg), mesh=mesh)
+    row_ids = ann.insert(new_vectors)    # O(batch) localized sweeps
+    ann.delete(row_ids[:k])              # tombstone + splice repair
+    ids, d = ann.search(q, scfg)         # tombstones traverse, never surface
+    ann.compact()                        # physically drop tombstones
+
+Updates compose with the mesh (the frontier rides the same all_to_all
+bucket exchange as the sharded build — bitwise-equal to single-device,
+tests/test_streaming.py), serving snapshots are epoch-consistent during
+updates, and the whole store persists through checkpoint/ onto any mesh
+shape. The churn trajectory (insert/delete throughput, recall vs rebuild)
+lives in repo-root BENCH_streaming.json.
 """
 import dataclasses
 import time
@@ -131,3 +154,22 @@ ids_1, _ = S.search_tiled(x, last_graph, q, entry, scfg, tile_b=128)
 ids_m, _ = S.search_tiled(x, last_graph, q, entry, scfg, tile_b=128, mesh=mesh)
 print(f"sharded[{jax.device_count()} dev]          build parity True  "
       f"search parity {bool(np.array_equal(np.asarray(ids_1), np.asarray(ids_m)))}")
+
+# streaming churn (see "Streaming updates" above): insert 20% new points and
+# delete 10% of the originals without a rebuild, then serve tombstone-aware
+from repro.streaming import StreamingANN, StreamingConfig
+from repro.streaming.store import active_mask
+
+n0 = 5000
+ann = StreamingANN.from_corpus(x[:n0], StreamingConfig(build=rnnd_cfg),
+                               key=jax.random.PRNGKey(1))
+t0 = time.perf_counter()
+ann.insert(x[n0:])                               # +1000 in one batch
+ins_sec = time.perf_counter() - t0
+ann.delete(np.arange(n0 // 10))                  # -500 tombstoned
+live = active_mask(ann.store)
+gt_sd, gt_si = E.ground_truth(ann.store.x, q, k=10, valid=live)
+ids_s, _ = ann.search(q, dataclasses.replace(scfg, topk=10))
+print(f"streaming churn           +{x.shape[0]-n0} pts in {ins_sec:5.2f}s  "
+      f"-{n0 // 10} tombstoned  recall@10 "
+      f"{E.recall_topk(ids_s, gt_si, valid=live):.4f}  epoch {ann.epoch}")

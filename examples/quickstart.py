@@ -59,3 +59,27 @@ scfg = S.SearchConfig(l=32, k=32, max_iters=96)
 ids_m, _ = S.search_tiled(x, graph, queries, entry, scfg, tile_b=128, mesh=mesh)
 print(f"  sharded serving ({jax.device_count()} device(s)): "
       f"recall@1={E.recall_at_k(ids_m, gt):.4f} (identical to unsharded)")
+
+# 6. streaming updates: the corpus churns without a rebuild. StreamingANN
+# wraps the index in a capacity-padded store — insert() beam-seeds new rows
+# off the current graph and runs localized RNN-Descent sweeps over the
+# touched frontier; delete() tombstones rows (still traversable as bridges,
+# never surfaced — search is tombstone-aware) and splices their neighbors
+# back together; compact() physically drops the tombstones.
+import numpy as np
+
+from repro.streaming import StreamingANN, StreamingConfig
+
+ann = StreamingANN.from_corpus(
+    x[:7000], StreamingConfig(build=cfg), key=jax.random.PRNGKey(1))
+new_ids = ann.insert(x[7000:])                  # +1000 points, no rebuild
+ann.delete(np.arange(500))                      # -500 originals, tombstoned
+ids_s, _ = ann.search(queries, S.SearchConfig(l=32, k=32, max_iters=96,
+                                              topk=10))
+from repro.streaming.store import active_mask
+live = active_mask(ann.store)
+gt_sd, gt_si = E.ground_truth(ann.store.x, queries, k=10, valid=live)
+print(f"  streaming churn (+1000/-500): recall@10="
+      f"{E.recall_topk(ids_s, gt_si, valid=live):.4f}  "
+      f"epoch={ann.epoch}  live={ann.live}/{ann.capacity} rows")
+assert not np.any(np.isin(np.asarray(ids_s), np.arange(500)))  # never surface

@@ -15,13 +15,38 @@ from repro.core import graph as G
 def ground_truth(
     x: jnp.ndarray, queries: jnp.ndarray, k: int = 1, metric: str = "l2",
     tile: int = 1024, use_pallas: bool = False,
+    valid: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Exact top-k via tiled brute force (optionally the Pallas distance tile)."""
+    """Exact top-k via tiled brute force (optionally the Pallas distance tile).
+
+    ``valid``: optional (n,) bool mask — masked rows (tombstones, capacity
+    padding in a streaming store) are excluded from the ground truth, so
+    churn benchmarks measure recall against the *surviving* corpus. When
+    fewer than k rows are valid the tail pads with (+inf, -1)."""
     if use_pallas:
         from repro.kernels.pairwise_l2 import ops as pl2
         d = pl2.pairwise_l2(queries, x)
+        if valid is not None:
+            d = jnp.where(valid[None, :], d, jnp.inf)
         neg, idx = jax.lax.top_k(-d, k)
-        return -neg, idx
+        return -neg, jnp.where(neg > -jnp.inf, idx, -1)
+    if valid is not None:
+        # masked fused tile-top-k (mirrors pairwise_tiled's k-path): only one
+        # (tile, n) distance block is ever live, never the full (Q, n) matrix
+        # — churn evaluation stays feasible at the corpus sizes the streaming
+        # store targets
+        nq = queries.shape[0]
+        pad = (-nq) % tile
+        q_tiles = jnp.pad(queries, ((0, pad), (0, 0))).reshape(
+            -1, tile if nq else 1, queries.shape[1])
+
+        def tile_topk(t):
+            d = jnp.where(valid[None, :], D.pairwise(t, x, metric), jnp.inf)
+            neg, idx = jax.lax.top_k(-d, k)
+            return -neg, jnp.where(neg > -jnp.inf, idx, -1)
+
+        d, idx = jax.lax.map(tile_topk, q_tiles)
+        return d.reshape(-1, k)[:nq], idx.reshape(-1, k)[:nq]
     return D.pairwise_tiled(queries, x, metric, tile_a=tile, k=k)
 
 
@@ -31,12 +56,31 @@ def recall_at_k(pred_ids: jnp.ndarray, gt_ids: jnp.ndarray) -> float:
     return float(jnp.mean(hit))
 
 
-def recall_topk(pred_ids: jnp.ndarray, gt_ids: jnp.ndarray) -> float:
+def recall_topk(
+    pred_ids: jnp.ndarray, gt_ids: jnp.ndarray,
+    valid: jnp.ndarray | None = None,
+) -> float:
     """Set recall: mean fraction of the true top-k (all gt columns) present in
     pred — the paper's recall@k, as opposed to :func:`recall_at_k`'s
-    1-NN-in-top-k."""
-    hit = jnp.any(pred_ids[:, :, None] == gt_ids[:, None, :], axis=1)
-    return float(jnp.mean(jnp.mean(hit, axis=1)))
+    1-NN-in-top-k.
+
+    ``valid``: optional (n,) bool mask for churned corpora — deleted /
+    padded ids are excluded from both sides: a masked gt column leaves the
+    denominator (the true top-k over survivors may be shorter than k), and a
+    masked prediction can never score a hit. Queries with no valid gt column
+    drop out of the mean entirely."""
+    if valid is None:
+        hit = jnp.any(pred_ids[:, :, None] == gt_ids[:, None, :], axis=1)
+        return float(jnp.mean(jnp.mean(hit, axis=1)))
+    gt_ok = (gt_ids >= 0) & valid[jnp.maximum(gt_ids, 0)]
+    pred_ok = (pred_ids >= 0) & valid[jnp.maximum(pred_ids, 0)]
+    match = (pred_ids[:, :, None] == gt_ids[:, None, :]) & pred_ok[:, :, None]
+    hit = jnp.any(match, axis=1) & gt_ok
+    denom = jnp.sum(gt_ok, axis=1)
+    per_q = jnp.sum(hit, axis=1) / jnp.maximum(denom, 1)
+    any_gt = denom > 0
+    return float(jnp.sum(jnp.where(any_gt, per_q, 0.0))
+                 / jnp.maximum(jnp.sum(any_gt), 1))
 
 
 def evaluate_search(
@@ -48,6 +92,7 @@ def evaluate_search(
     entry_points: jnp.ndarray | None = None,
     tile_b: int = 256,
     repeats: int = 2,
+    valid: jnp.ndarray | None = None,
 ) -> dict:
     """Recall@k + QPS over the tiled serving driver (``search_tiled``).
 
@@ -56,17 +101,24 @@ def evaluate_search(
     number that is now independent of the corpus size in hashed mode — and
     which beam inner-loop implementation served (``cfg.use_pallas`` selects
     the fused Pallas gather+score kernel; results are bitwise-identical
-    either way)."""
+    either way).
+
+    ``valid``: optional (n,) tombstone/padding mask for churned corpora —
+    threads through serving (masked ids traverse but never surface), seeds
+    the default entry point from live rows only, and scores recall with the
+    masked :func:`recall_at_k` semantics (pass gt computed with the same
+    mask via :func:`ground_truth`)."""
     from repro.core import search as S
 
     if entry_points is None:
-        entry_points = S.default_entry_point(x, cfg.metric)
+        entry_points = S.default_entry_point(x, cfg.metric, valid=valid)
     sec, (ids, _) = timed(
         S.search_tiled, x, g, queries, entry_points, cfg, tile_b=tile_b,
-        repeats=repeats)
+        valid=valid, repeats=repeats)
     lanes = min(tile_b, queries.shape[0])
     return {
         "recall_at_1": recall_at_k(ids, gt_ids),
+        "recall_topk": recall_topk(ids, gt_ids, valid=valid),
         "qps": queries.shape[0] / sec,
         "visited_mode": cfg.visited,
         "visited_bytes_per_tile": S.visited_state_bytes(cfg, x.shape[0], lanes),

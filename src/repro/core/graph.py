@@ -244,6 +244,7 @@ def _bucket_slots(ids: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
 def bucket_scatter_tables(
     rows: jnp.ndarray, ids: jnp.ndarray, dist: jnp.ndarray, flag: jnp.ndarray,
     n: int, n_buckets: int, prio: jnp.ndarray | None = None,
+    row_ids: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray | None, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Raw staged bucket tables for a flat edge list: ``(p, k, i, f)`` of
     shape (n, n_buckets) — winning priority (None when ``prio`` is None),
@@ -256,12 +257,23 @@ def bucket_scatter_tables(
     edge list combine exactly via :func:`combine_bucket_tables` — the property
     the multi-device sharded build (core/shard.py) relies on for bitwise
     parity. Empty slots are (INT32_MAX, _KEY_SENTINEL, INT32_MAX, 0).
+
+    ``row_ids``: (n,) global vertex ids of the table rows, for callers whose
+    table row index is *not* the vertex id (the streaming frontier tables,
+    where row f is vertex frontier[f]). The self-loop guard then compares a
+    candidate id against ``row_ids[row]``; the default (None) keeps the
+    historical ``id != row`` identity-mapping guard.
     """
     rows = rows.reshape(-1).astype(jnp.int32)
     ids = ids.reshape(-1).astype(jnp.int32)
     dist = dist.reshape(-1)
     flag = flag.reshape(-1)
-    valid = (ids >= 0) & (rows >= 0) & (rows < n) & (ids != rows) & ~jnp.isnan(dist)
+    if row_ids is None:
+        self_of_row = rows
+    else:
+        self_of_row = row_ids[jnp.clip(rows, 0, n - 1)].astype(jnp.int32)
+    valid = (ids >= 0) & (rows >= 0) & (rows < n) & (ids != self_of_row) \
+        & ~jnp.isnan(dist)
     slot = _bucket_slots(ids, n_buckets)
     key = dist_key(dist)
     grow = jnp.where(valid, rows, 0)  # in-bounds gather index for alive checks
@@ -331,6 +343,7 @@ def decode_bucket_tables(
 def bucket_scatter(
     rows: jnp.ndarray, ids: jnp.ndarray, dist: jnp.ndarray, flag: jnp.ndarray,
     n: int, n_buckets: int, prio: jnp.ndarray | None = None,
+    row_ids: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Scatter a flat edge list into per-row hashed buckets.
 
@@ -346,7 +359,7 @@ def bucket_scatter(
     winner-only max-scatter.
     """
     _, k_tab, i_tab, f_tab = bucket_scatter_tables(
-        rows, ids, dist, flag, n, n_buckets, prio=prio
+        rows, ids, dist, flag, n, n_buckets, prio=prio, row_ids=row_ids
     )
     return decode_bucket_tables(k_tab, i_tab, f_tab)
 

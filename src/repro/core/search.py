@@ -231,6 +231,7 @@ def _search_impl(
     queries: jnp.ndarray,
     eps: jnp.ndarray,            # (B, E) validated
     cfg: SearchConfig,
+    valid: jnp.ndarray | None = None,   # (n,) bool — see tombstone note below
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     n = x.shape[0]
     b = queries.shape[0]
@@ -304,10 +305,12 @@ def _search_impl(
             nbrs, cand_d, _ = beam_score_ref(
                 x, g.neighbors, u, queries, k=k, metric=cfg.metric,
                 gram_dtype=cfg.gram_dtype)
-        valid = (nbrs >= 0) & active[:, None]
+        # cand_ok: per-candidate validity (real neighbor slot, live lane) —
+        # distinct from the function-level `valid` tombstone mask
+        cand_ok = (nbrs >= 0) & active[:, None]
         if dense:
             seen = visited[rows[:, None], jnp.maximum(nbrs, 0)]
-            fresh = valid & ~seen
+            fresh = cand_ok & ~seen
             ins_idx = jnp.where(fresh, nbrs, n)                   # n = scratch slot
             visited = visited.at[rows[:, None], ins_idx].set(True)
         else:
@@ -315,8 +318,8 @@ def _search_impl(
             # a lost insertion can cost a re-score, never a duplicate result
             in_beam = jnp.any(nbrs[:, :, None] == beam_ids[:, None, :], axis=-1)
             seen, visited = _visited_lookup_insert(
-                visited, nbrs, valid & ~in_beam, rows, cfg.probes)
-            fresh = valid & ~seen & ~in_beam
+                visited, nbrs, cand_ok & ~in_beam, rows, cfg.probes)
+            fresh = cand_ok & ~seen & ~in_beam
 
         nd = jnp.where(fresh, cand_d, jnp.inf)
 
@@ -333,6 +336,18 @@ def _search_impl(
     beam_ids, beam_d, _, _, _, _ = jax.lax.while_loop(cond, body, state)
     # beam rows are top_k-sorted ascending and duplicate-free by construction,
     # so the topk prefix is sorted-valid for any topk <= L
+    if valid is not None:
+        # tombstone-aware serving (streaming/): masked vertices traverse the
+        # beam like any other (they are live bridges in the graph) but must
+        # never surface as results — demote them to (+inf, -1) and re-rank.
+        # The beam's L - topk slack absorbs masked entries; results stay
+        # sorted, duplicate-free, and -1-padded when fewer than topk valid
+        # vertices were reached.
+        ok = (beam_ids >= 0) & valid[jnp.maximum(beam_ids, 0)]
+        masked_d = jnp.where(ok, beam_d, jnp.inf)
+        neg_d, order = jax.lax.top_k(-masked_d, cfg.topk)
+        out_ids = jnp.take_along_axis(beam_ids, order, axis=1)
+        return jnp.where(neg_d > -jnp.inf, out_ids, -1), -neg_d
     return beam_ids[:, : cfg.topk], beam_d[:, : cfg.topk]
 
 
@@ -343,13 +358,18 @@ def search(
     queries: jnp.ndarray,
     entry_points: jnp.ndarray,
     cfg: SearchConfig,
+    valid: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (ids, dists) of shape (B, topk), ascending distance.
 
     ``entry_points``: scalar | (B,) | (B, E) — see :func:`_validate_entry_points`.
+    ``valid``: optional (n,) bool mask — vertices marked False (tombstones,
+    capacity padding) are traversed normally but never returned; lanes
+    reaching fewer than topk valid vertices pad with (-1, +inf). ``None``
+    keeps the historical exact path (bitwise unchanged).
     """
     eps = _validate_entry_points(entry_points, queries.shape[0], cfg.l)
-    return _search_impl(x, g, queries, eps, cfg)
+    return _search_impl(x, g, queries, eps, cfg, valid=valid)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "tile_b", "mesh"))
@@ -361,6 +381,7 @@ def search_tiled(
     cfg: SearchConfig,
     tile_b: int = 256,
     mesh=None,
+    valid: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Stream an arbitrary query count through B_tile-sized ``lax.map`` tiles.
 
@@ -378,6 +399,9 @@ def search_tiled(
     are exactly equal (ids and dist bits) to ``mesh=None`` — asserted in
     tests/test_sharded_parity.py — and the path composes with both
     ``visited`` modes and ``use_pallas``.
+
+    ``valid``: optional (n,) tombstone/padding mask (see :func:`search`) —
+    replicated per device under a mesh, composing with every other option.
     """
     b = queries.shape[0]
     eps = _validate_entry_points(entry_points, b, cfg.l)
@@ -397,9 +421,9 @@ def search_tiled(
     q_tiles = q_p.reshape(-1, tile_b, queries.shape[1])
     ep_tiles = eps_p.reshape(-1, tile_b, eps.shape[1])
 
-    def tiles_body(xx, gg, qt, et):
+    def tiles_body(xx, gg, vv, qt, et):
         return jax.lax.map(
-            lambda t: _search_impl(xx, gg, t[0], t[1], cfg), (qt, et)
+            lambda t: _search_impl(xx, gg, t[0], t[1], cfg, valid=vv), (qt, et)
         )
 
     if qaxes:
@@ -410,36 +434,76 @@ def search_tiled(
         from jax.sharding import PartitionSpec as P
         qspec = SH.pspec(mesh, "queries", None, None)
         rep = G.Graph(P(), P(), P())
-        ids, dists = shard_map(
-            tiles_body, mesh=mesh,
-            in_specs=(P(), rep, qspec, qspec),
-            out_specs=(qspec, qspec),
-            check_rep=False,
-        )(x, g, q_tiles, ep_tiles)
+        if valid is None:
+            def no_mask(xx, gg, qt, et):
+                return tiles_body(xx, gg, None, qt, et)
+            ids, dists = shard_map(
+                no_mask, mesh=mesh,
+                in_specs=(P(), rep, qspec, qspec),
+                out_specs=(qspec, qspec),
+                check_rep=False,
+            )(x, g, q_tiles, ep_tiles)
+        else:
+            ids, dists = shard_map(
+                tiles_body, mesh=mesh,
+                in_specs=(P(), rep, P(), qspec, qspec),
+                out_specs=(qspec, qspec),
+                check_rep=False,
+            )(x, g, valid, q_tiles, ep_tiles)
     else:
-        ids, dists = tiles_body(x, g, q_tiles, ep_tiles)
+        ids, dists = tiles_body(x, g, valid, q_tiles, ep_tiles)
     return ids.reshape(-1, cfg.topk)[:b], dists.reshape(-1, cfg.topk)[:b]
 
 
-def default_entry_point(x: jnp.ndarray, metric: str = "l2") -> jnp.ndarray:
-    """NSG-style navigating node: the vertex nearest the dataset centroid."""
-    c = jnp.mean(x, axis=0)
-    return jnp.argmin(D.point_to_points(c, x, metric)).astype(jnp.int32)
+def default_entry_point(
+    x: jnp.ndarray, metric: str = "l2", valid: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """NSG-style navigating node: the vertex nearest the dataset centroid.
+
+    ``valid``: optional (n,) bool mask — with a capacity-padded / tombstoned
+    corpus (streaming/), the centroid is taken over live rows only and the
+    returned seed is guaranteed live. Without it a tombstoned or padded row
+    (an all-zeros vector is often centroid-nearest!) could be handed out as
+    a seed and silently burn a beam slot."""
+    if valid is None:
+        c = jnp.mean(x, axis=0)
+        return jnp.argmin(D.point_to_points(c, x, metric)).astype(jnp.int32)
+    w = valid.astype(x.dtype)
+    c = jnp.sum(x * w[:, None], axis=0) / jnp.maximum(jnp.sum(w), 1.0)
+    d = jnp.where(valid, D.point_to_points(c, x, metric), jnp.inf)
+    return jnp.argmin(d).astype(jnp.int32)
 
 
 def default_entry_points(
     x: jnp.ndarray, n_entries: int = 1, metric: str = "l2",
-    key: jax.Array | None = None,
+    key: jax.Array | None = None, valid: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """(E,) seed set: the centroid-nearest vertex plus ``n_entries - 1``
     distinct random vertices (diversified seeding for multi-entry search).
-    Broadcast to (B, E) to share across a query batch."""
-    center = default_entry_point(x, metric)
+    Broadcast to (B, E) to share across a query batch.
+
+    ``valid``: optional (n,) bool mask — every returned seed is drawn from
+    live rows only (tombstoned / capacity-padded rows are never handed out).
+    ``None`` keeps the historical sampling bit-for-bit."""
+    center = default_entry_point(x, metric, valid=valid)
     if n_entries <= 1:
         return center[None]
     key = jax.random.PRNGKey(0) if key is None else key
-    # sample from [0, n-1) and shift indices >= center up by one: distinct
-    # from each other (choice without replacement) and never equal to center
-    extra = jax.random.choice(key, x.shape[0] - 1, (n_entries - 1,), replace=False)
-    extra = (extra + (extra >= center)).astype(jnp.int32)
+    if valid is None:
+        # sample from [0, n-1) and shift indices >= center up by one: distinct
+        # from each other (choice without replacement) and never equal to
+        # center
+        extra = jax.random.choice(key, x.shape[0] - 1, (n_entries - 1,),
+                                  replace=False)
+        extra = (extra + (extra >= center)).astype(jnp.int32)
+        return jnp.concatenate([center[None], extra])
+    # masked sampling without replacement: rank rows by a uniform draw, with
+    # masked rows and the centroid seed pushed past every live row. If fewer
+    # than n_entries rows are live, the tail repeats the centroid seed —
+    # duplicate seeds within a lane are inert (see _search_impl).
+    score = jax.random.uniform(key, (x.shape[0],))
+    score = jnp.where(valid, score, jnp.inf).at[center].set(jnp.inf)
+    order = jnp.argsort(score)[: n_entries - 1].astype(jnp.int32)
+    live = jnp.isfinite(jnp.sort(score)[: n_entries - 1])
+    extra = jnp.where(live, order, center)
     return jnp.concatenate([center[None], extra])

@@ -1,0 +1,18 @@
+"""Streaming (dynamic) index subsystem: incremental insert/delete with
+tombstone-aware serving over the RNN-Descent graph.
+
+Layers (see each module's docstring for the design):
+
+* :mod:`repro.streaming.store`   — capacity-padded corpus + graph + masks
+* :mod:`repro.streaming.updates` — batched insert / delete repair primitives
+* :mod:`repro.streaming.index`   — the StreamingANN API (epoch snapshots,
+  mesh composition, persistence)
+"""
+from repro.streaming.index import StreamingANN
+from repro.streaming.store import Store, active_mask, from_built
+from repro.streaming.updates import StreamingConfig, delete, insert
+
+__all__ = [
+    "StreamingANN", "Store", "StreamingConfig", "active_mask", "from_built",
+    "delete", "insert",
+]

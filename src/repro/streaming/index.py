@@ -1,0 +1,203 @@
+"""StreamingANN: a dynamic ANN index — insert, delete, search, compact,
+save/restore — over the capacity-padded :class:`repro.streaming.store.Store`.
+
+Epoch-snapshot serving
+----------------------
+Every store field is an immutable jax array and every update
+(:func:`repro.streaming.updates.insert` / ``delete`` / ``compact``) is a pure
+function returning a *new* store. ``StreamingANN`` therefore never mutates
+index state in place: an update computes the next store off to the side and
+then commits it with a single Python reference swap, bumping ``epoch``. A
+reader that captured ``snapshot()`` (or simply entered ``search()``, which
+reads the reference once) keeps serving the complete, internally-consistent
+graph of its epoch no matter how many updates commit meanwhile — there is no
+intermediate state to observe, the exact analogue of an RCU epoch scheme but
+enforced by functional purity instead of barriers.
+
+Serving is tombstone-aware end to end: ``search`` threads the store's
+live-row mask through ``search_tiled(valid=)`` (deleted rows are traversed
+as bridges but never surface; capacity padding is unreachable by
+construction) and seeds entry points from live rows only.
+
+Mesh composition: ``mesh=`` routes construction through the PR-4 row-sharded
+build, updates through the frontier-sharded exchange in updates.py, and
+serving through query-tile sharding — all bitwise-equal to single-device.
+Persistence rides checkpoint/ (atomic-commit npz): the whole store pytree —
+vectors, adjacency, masks, epoch — saves as host arrays and restores onto
+any mesh shape (tests/test_index_persistence.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import checkpoint
+from repro.core import graph as G
+from repro.core import rnn_descent as rd
+from repro.core import search as S
+from repro.streaming import store as ST
+from repro.streaming import updates as U
+
+
+def _place(st: ST.Store, mesh: Mesh | None) -> ST.Store:
+    """Commit a store to the mesh, replicated (serving reads everything per
+    device; update programs re-shard internally via shard_map)."""
+    if mesh is None:
+        return st
+    sh = NamedSharding(mesh, P())
+    put = lambda a: jax.device_put(jnp.asarray(np.asarray(a)), sh)
+    return ST.Store(x=put(st.x), graph=G.Graph(*(put(a) for a in st.graph)),
+                    occupied=put(st.occupied), tombstone=put(st.tombstone),
+                    epoch=put(st.epoch))
+
+
+@dataclasses.dataclass
+class StreamingANN:
+    """A dynamic index bound to a (possibly absent) mesh.
+
+    >>> ann = StreamingANN.from_corpus(x, cfg=StreamingConfig(...))
+    >>> new_ids = ann.insert(new_vectors)       # row ids of the new points
+    >>> ann.delete(new_ids[:8])                 # tombstone + splice repair
+    >>> ids, dists = ann.search(queries, S.SearchConfig(l=32, topk=10))
+    >>> remap = ann.compact()                   # physically drop tombstones
+    >>> ann.save("/ckpts/stream"); StreamingANN.restore("/ckpts/stream")
+    """
+
+    store: ST.Store
+    cfg: U.StreamingConfig
+    mesh: Mesh | None = None
+
+    # ------------------------------------------------------------ lifecycle
+    @classmethod
+    def from_corpus(cls, x, cfg: U.StreamingConfig | None = None,
+                    key: jax.Array | None = None, mesh: Mesh | None = None,
+                    capacity: int | None = None) -> "StreamingANN":
+        """Batch-build the initial graph (``rnn_descent.build``, row-sharded
+        over ``mesh`` when given) and wrap it into a padded store."""
+        cfg = cfg if cfg is not None else U.StreamingConfig()
+        key = key if key is not None else jax.random.PRNGKey(0)
+        g = rd.build(jnp.asarray(x, jnp.float32), cfg.build, key, mesh=mesh)
+        st = ST.from_built(jnp.asarray(x, jnp.float32), g, capacity=capacity)
+        return cls(store=st, cfg=cfg, mesh=mesh)
+
+    # -------------------------------------------------------------- queries
+    def snapshot(self) -> tuple[int, ST.Store]:
+        """(epoch, store) — the store pytree is immutable, so holding it
+        serves a consistent graph across any number of later updates."""
+        st = self.store
+        return int(st.epoch), st
+
+    def search(self, queries, cfg: S.SearchConfig | None = None,
+               entry_points=None, tile_b: int = 256):
+        """Tombstone-aware serving over the current epoch's snapshot:
+        deleted rows route traffic but never appear in the top-k; lanes
+        reaching fewer than topk live vertices pad with (-1, +inf)."""
+        st = self.store                      # one read = a consistent epoch
+        cfg = cfg if cfg is not None else S.SearchConfig()
+        valid = ST.active_mask(st)
+        if entry_points is None:
+            entry_points = S.default_entry_point(st.x, cfg.metric,
+                                                 valid=valid)
+        return S.search_tiled(st.x, st.graph, jnp.asarray(queries),
+                              entry_points, cfg, tile_b=tile_b,
+                              mesh=self.mesh, valid=valid)
+
+    # -------------------------------------------------------------- updates
+    def insert(self, new_x) -> np.ndarray:
+        """Insert a batch; returns the assigned row ids. Grows the store
+        (power-of-two capacity, a recompile event) when free rows run out,
+        then commits the updated store atomically."""
+        new_x = jnp.asarray(new_x, jnp.float32)
+        b = int(new_x.shape[0])
+        st = self.store
+        if ST.free_count(st) < b:
+            st = ST.grow(st, ST.occupied_count(st) + b)
+            if self.mesh is not None:
+                st = _place(st, self.mesh)
+        st, slots = U.insert(st, new_x, self.cfg, mesh=self.mesh)
+        self.store = st                      # atomic epoch swap
+        return slots
+
+    def delete(self, ids) -> None:
+        """Tombstone + splice-repair a batch of row ids (idempotent)."""
+        self.store = U.delete(self.store, ids, self.cfg, mesh=self.mesh)
+
+    def compact(self, repair_sweeps: int = 1) -> np.ndarray:
+        """Physically drop tombstoned rows (dense renumbering; returns the
+        old-row -> new-row remap, -1 for removed). ``repair_sweeps`` full
+        ``update_neighbors`` passes run afterwards to re-knit regions that
+        leaned on tombstone bridges (0 to skip) — row-sharded over the mesh
+        when one is bound (bitwise-identical to single-device, like every
+        other sweep)."""
+        st, remap = ST.compact(self.store)
+        for _ in range(repair_sweeps):
+            if self.mesh is not None:
+                from repro.core import shard
+                g = shard.rnn_update_neighbors(st.x, st.graph,
+                                               self.cfg.build, self.mesh)
+            else:
+                g = rd.update_neighbors(st.x, st.graph, self.cfg.build)
+            st = st._replace(graph=g)
+        self.store = _place(st, self.mesh) if self.mesh is not None else st
+        return remap
+
+    # ---------------------------------------------------------- persistence
+    def save(self, ckpt_dir: str, step: int | None = None) -> None:
+        """Atomic-commit save of the whole store (host arrays —
+        mesh-agnostic). Default step = current epoch."""
+        st = self.store
+        checkpoint.save(ckpt_dir, int(st.epoch) if step is None else step,
+                        st)
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, cfg: U.StreamingConfig | None = None,
+                mesh: Mesh | None = None, step: int | None = None,
+                ) -> "StreamingANN":
+        """Elastic restore onto any mesh shape (or none): tombstones,
+        capacity padding and the epoch counter all round-trip."""
+        if step is None:
+            step = checkpoint.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+        like = ST.Store(x=0, graph=G.Graph(0, 0, 0), occupied=0, tombstone=0,
+                        epoch=0)
+        st = checkpoint.restore(ckpt_dir, step, like)
+        st = ST.Store(x=jnp.asarray(st.x), graph=G.Graph(*(jnp.asarray(a)
+                                                           for a in st.graph)),
+                      occupied=jnp.asarray(st.occupied),
+                      tombstone=jnp.asarray(st.tombstone),
+                      epoch=jnp.asarray(st.epoch))
+        if cfg is None:
+            m = st.graph.neighbors.shape[1]
+            cfg = U.StreamingConfig(
+                build=rd.RNNDescentConfig(capacity=m, r=min(96, m)),
+                seed_k=min(24, m))
+        return cls(store=_place(st, mesh), cfg=cfg, mesh=mesh)
+
+    # ------------------------------------------------------------ inspection
+    @property
+    def epoch(self) -> int:
+        return int(self.store.epoch)
+
+    @property
+    def live(self) -> int:
+        return ST.live_count(self.store)
+
+    @property
+    def capacity(self) -> int:
+        return self.store.capacity
+
+    def stats(self) -> dict[str, Any]:
+        st = self.store
+        return {
+            "epoch": int(st.epoch),
+            "capacity": st.capacity,
+            "occupied": ST.occupied_count(st),
+            "live": ST.live_count(st),
+            "tombstones": int(jnp.sum(st.tombstone)),
+        }

@@ -1,0 +1,170 @@
+"""Capacity-padded corpus store for the streaming (dynamic) index.
+
+The batch builders produce an immutable (x, graph) pair sized exactly to the
+corpus. A churning corpus instead lives in a :class:`Store`: every array is
+padded to a power-of-two ``capacity``, and two row masks track liveness —
+
+``occupied``   the row holds a vector (inserted at some point). Occupied rows
+               participate in graph traversal whether or not they are
+               tombstoned; unoccupied rows are inert (zero vector, empty
+               adjacency, no in-edges) and exist only so jitted update/search
+               programs see stable shapes across update batches.
+
+``tombstone``  the row was deleted (subset of ``occupied``). Tombstoned rows
+               stay *traversable* — their out-edges survive and other rows
+               may keep pointing at them, so they act as bridges for beam
+               search — but they must never surface in results
+               (``search_tiled(valid=...)``) and :func:`compact` eventually
+               rebuilds the store without them.
+
+Why power-of-two capacity: jit caches are keyed on shapes, so growing the
+store by exactly one batch would recompile every update program on every
+batch. Doubling instead amortizes recompilation to O(log n) growth events,
+at the classic ≤ 2x memory overhead — the same tradeoff as the hashed visited
+table and bucket widths elsewhere in the codebase. Per-row memory is
+``d * 4`` (x) + ``M * 9`` (adjacency fields) + 2 bytes (masks), so a store at
+capacity C carries at most twice the footprint of an exact-fit corpus.
+
+Everything here is a pure function from Store to Store: updates build a new
+pytree and leave the input untouched, which is what makes the epoch-snapshot
+serving contract in streaming/index.py trivially safe.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graph as G
+
+
+class Store(NamedTuple):
+    """x: (C, d) f32 (zeros in unoccupied rows) | graph: (C, M) adjacency |
+    occupied / tombstone: (C,) bool | epoch: () int32 update counter."""
+
+    x: jnp.ndarray
+    graph: G.Graph
+    occupied: jnp.ndarray
+    tombstone: jnp.ndarray
+    epoch: jnp.ndarray
+
+    @property
+    def capacity(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.x.shape[1]
+
+    @property
+    def m(self) -> int:
+        return self.graph.neighbors.shape[1]
+
+
+def next_capacity(n: int) -> int:
+    """Smallest power of two >= max(n, 8)."""
+    return 1 << max(3, (n - 1).bit_length())
+
+
+def active_mask(store: Store) -> jnp.ndarray:
+    """(C,) bool — rows that may surface in search results."""
+    return store.occupied & ~store.tombstone
+
+
+def live_count(store: Store) -> int:
+    return int(jnp.sum(active_mask(store)))
+
+
+def occupied_count(store: Store) -> int:
+    return int(jnp.sum(store.occupied))
+
+
+def free_count(store: Store) -> int:
+    """Rows available for insertion. Tombstoned rows are NOT free until
+    :func:`compact` — their vector must stay resident while in-edges may
+    still route traffic through them."""
+    return store.capacity - occupied_count(store)
+
+
+def _pad_graph(g: G.Graph, cap: int) -> G.Graph:
+    n = g.n
+    return G.Graph(
+        neighbors=jnp.pad(g.neighbors, ((0, cap - n), (0, 0)),
+                          constant_values=-1),
+        dists=jnp.pad(g.dists, ((0, cap - n), (0, 0)),
+                      constant_values=jnp.inf),
+        flags=jnp.pad(g.flags, ((0, cap - n), (0, 0)), constant_values=G.OLD),
+    )
+
+
+def from_built(x: jnp.ndarray, g: G.Graph,
+               capacity: int | None = None) -> Store:
+    """Wrap a batch-built (x, graph) pair into a padded store (rows [0, n)
+    occupied, nothing tombstoned, epoch 0)."""
+    n = x.shape[0]
+    assert g.n == n, (g.n, n)
+    cap = next_capacity(n if capacity is None else max(capacity, n))
+    return Store(
+        x=jnp.pad(x.astype(jnp.float32), ((0, cap - n), (0, 0))),
+        graph=_pad_graph(g, cap),
+        occupied=jnp.arange(cap) < n,
+        tombstone=jnp.zeros((cap,), bool),
+        epoch=jnp.int32(0),
+    )
+
+
+def grow(store: Store, min_capacity: int) -> Store:
+    """Re-pad every array to ``next_capacity(min_capacity)`` (a host-level
+    shape change — jitted update programs recompile at the new capacity,
+    which the power-of-two schedule makes a O(log n)-times event)."""
+    cap = store.capacity
+    new_cap = next_capacity(min_capacity)
+    if new_cap <= cap:
+        return store
+    pad = new_cap - cap
+    return Store(
+        x=jnp.pad(store.x, ((0, pad), (0, 0))),
+        graph=_pad_graph(store.graph, new_cap),
+        occupied=jnp.pad(store.occupied, (0, pad)),
+        tombstone=jnp.pad(store.tombstone, (0, pad)),
+        epoch=store.epoch,
+    )
+
+
+def compact(store: Store) -> tuple[Store, np.ndarray]:
+    """Rebuild the store without tombstoned (and unoccupied) rows.
+
+    Survivors are renumbered densely from 0 in ascending old-row order;
+    edges into removed rows are dropped (the delete-time splice repair
+    already bridged around them) and each row is re-sorted to the row
+    invariant. Returns ``(new_store, remap)`` where ``remap[old_row]`` is the
+    new row id, or -1 for removed rows — callers that hand out row ids must
+    translate through it. Host-level (shape change), like :func:`grow`."""
+    occ = np.asarray(store.occupied)
+    tomb = np.asarray(store.tombstone)
+    alive = occ & ~tomb
+    old_ids = np.flatnonzero(alive)
+    n_new = int(old_ids.shape[0])
+    cap2 = next_capacity(n_new)
+    remap = np.full(store.capacity, -1, np.int32)
+    remap[old_ids] = np.arange(n_new, dtype=np.int32)
+
+    nb = np.asarray(store.graph.neighbors)[old_ids]
+    nb2 = np.where(nb >= 0, remap[np.maximum(nb, 0)], -1)
+    d2 = np.where(nb2 >= 0, np.asarray(store.graph.dists)[old_ids], np.inf)
+    f2 = np.where(nb2 >= 0, np.asarray(store.graph.flags)[old_ids], G.OLD)
+    g2 = G.sort_rows(G.Graph(
+        neighbors=jnp.asarray(nb2, jnp.int32),
+        dists=jnp.asarray(d2, jnp.float32),
+        flags=jnp.asarray(f2, jnp.uint8),
+    ))
+    new = Store(
+        x=jnp.pad(jnp.asarray(np.asarray(store.x)[old_ids]),
+                  ((0, cap2 - n_new), (0, 0))),
+        graph=_pad_graph(g2, cap2),
+        occupied=jnp.arange(cap2) < n_new,
+        tombstone=jnp.zeros((cap2,), bool),
+        epoch=store.epoch + 1,
+    )
+    return new, remap

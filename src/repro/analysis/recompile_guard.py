@@ -1,0 +1,166 @@
+"""Recompilation guard: counts XLA backend-compile events across a scripted
+streaming-churn workload and asserts the power-of-two-growth contract.
+
+The streaming design doc (streaming/store.py) promises that capacity-driven
+shape changes — the only thing that should ever retrace a jitted update
+program — happen on a power-of-two schedule, so a store growing from n0 to n
+sees O(log n/n0) distinct capacities and the total number of compiles is
+``base + per_growth * n_growths``, NOT O(#inserts). The two failure modes
+this guard exists to catch:
+
+* a shape leak (batch size, frontier pad, valid-mask length...) threading a
+  *data-dependent* dimension into a jitted update program, turning every
+  insert into a compile;
+* a host-side cache-buster (non-hashable static arg, config object rebuilt
+  per call with unstable identity) doing the same without any shape change.
+
+Counting uses ``jax.monitoring``'s backend-compile duration events — the
+same instrumentation the profiler uses, emitted once per XLA compilation,
+including those triggered inside helper libraries. The workload therefore
+does a warmup phase first (incidental jnp-level compiles, entry-point
+medoids etc.), then measures:
+
+phase A (steady state): repeated same-shape insert/delete/search churn at
+    fixed capacity — must compile NOTHING;
+phase B (growth): inserts until the capacity doubles ``n_growths`` times —
+    compile count must stay within ``per_growth`` per doubling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.baseline import Finding
+
+_events: list[str] = []
+_registered = False
+
+
+def _ensure_listener() -> None:
+    global _registered
+    if _registered:
+        return
+
+    def _on_event(event: str, duration: float, **kw) -> None:
+        if "backend_compile" in event:
+            _events.append(event)
+
+    jax.monitoring.register_event_duration_secs_listener(_on_event)
+    _registered = True
+
+
+class compile_counter:
+    """Context manager counting XLA backend compiles inside the block."""
+
+    def __enter__(self) -> "compile_counter":
+        _ensure_listener()
+        self._start = len(_events)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.count = len(_events) - self._start
+
+    @property
+    def so_far(self) -> int:
+        return len(_events) - self._start
+
+
+def churn_workload(batch: int = 16, steady_rounds: int = 4,
+                   n_growths: int = 3, seed: int = 0):
+    """Run the scripted churn; returns (steady_compiles, growth_compiles,
+    capacities) — the raw numbers ``run`` asserts budgets over."""
+    from repro.core import rnn_descent as rd
+    from repro.core import search as S
+    from repro.streaming import StreamingANN, StreamingConfig
+
+    cfg = StreamingConfig(
+        build=rd.RNNDescentConfig(s=4, r=8, t1=2, t2=2, capacity=16,
+                                  chunk=64),
+        seed_l=16, seed_k=8, seed_iters=16, search_k=8, batch_k=4,
+        sweeps=1, splice_k=4, delete_fanout=8)
+    scfg = S.SearchConfig(l=8, k=8, max_iters=16, topk=4)
+    key = jax.random.PRNGKey(seed)
+    k0, kq, kb = jax.random.split(key, 3)
+    d = 8
+    x0 = jax.random.normal(k0, (48, d), jnp.float32)
+    queries = jax.random.normal(kq, (8, d), jnp.float32)
+
+    def fresh_batch(i):
+        return jax.random.normal(jax.random.fold_in(kb, i), (batch, d),
+                                 jnp.float32)
+
+    ann = StreamingANN.from_corpus(x0, cfg, key=k0)
+    # pre-grow so warmup + steady fit one capacity: deletes only tombstone
+    # (rows stay occupied until compact), so every insert consumes fresh
+    # rows — headroom must cover all of them or capacity doubles mid-phase
+    from repro.streaming import store as ST
+    ann.store = ST.grow(
+        ann.store,
+        ST.occupied_count(ann.store) + (2 + steady_rounds + 1) * batch)
+
+    # warmup: one full round compiles every program shape the steady phase
+    # will use (insert path, delete path, serving path)
+    ids = ann.insert(fresh_batch(0))
+    ann.delete(ids)
+    ids = ann.insert(fresh_batch(1))
+    ann.delete(ids[: batch // 2])
+    ann.delete(ids[batch // 2:])
+    ann.search(queries, scfg)
+    jax.block_until_ready(ann.store.x)
+
+    with compile_counter() as steady:
+        for i in range(steady_rounds):
+            ids = ann.insert(fresh_batch(2 + i))
+            ann.search(queries, scfg)
+            ann.delete(ids)
+        jax.block_until_ready(ann.store.x)
+
+    capacities = [ann.store.capacity]
+    with compile_counter() as growth:
+        i = 100
+        while len(capacities) <= n_growths:
+            ann.insert(fresh_batch(i))
+            i += 1
+            if ann.store.capacity != capacities[-1]:
+                capacities.append(ann.store.capacity)
+        jax.block_until_ready(ann.store.x)
+    return steady.count, growth.count, capacities
+
+
+def run(per_growth: int = 48, log=print, batch: int = 16,
+        steady_rounds: int = 4, n_growths: int = 3) -> list[Finding]:
+    """``per_growth`` is the compile budget per capacity doubling: each new
+    capacity legitimately retraces the insert pipeline (graft + seeding
+    search + entry-point scan and their jnp helpers — measured ~30 on CPU
+    jax 0.4; headroom for backend variation, NOT enough to hide a
+    per-insert leak, which would blow through it after a couple of
+    batches)."""
+    steady, growth, caps = churn_workload(batch=batch,
+                                          steady_rounds=steady_rounds,
+                                          n_growths=n_growths)
+    n_growth_events = len(caps) - 1
+    budget = per_growth * n_growth_events
+    log(f"recompile-guard: steady-state compiles={steady} (budget 0), "
+        f"growth compiles={growth} over capacities {caps} "
+        f"(budget {budget})")
+    findings = []
+    if steady > 0:
+        findings.append(Finding(
+            "recompile", "steady-state-recompile", "streaming-churn",
+            f"{steady} compiles during fixed-shape churn "
+            f"({steady_rounds} insert/search/delete rounds at capacity "
+            f"{caps[0]}): a data-dependent shape or unstable static arg is "
+            "leaking into a jitted update program"))
+    if growth > budget:
+        findings.append(Finding(
+            "recompile", "growth-budget", "streaming-churn",
+            f"{growth} compiles across {n_growth_events} capacity "
+            f"doublings (budget {budget}): the O(log n) power-of-two "
+            "growth contract is broken"))
+    for a, b in zip(caps, caps[1:]):
+        if b != 2 * a:
+            findings.append(Finding(
+                "recompile", "growth-schedule", "streaming-churn",
+                f"capacity stepped {a} -> {b}, expected exact doubling "
+                "(store.next_capacity power-of-two contract)"))
+    return findings

@@ -1,0 +1,168 @@
+"""AST-level repo lint for banned patterns in library code (``src/repro``).
+
+Rules:
+
+``bare-assert``
+    ``assert`` statements in library runtime paths. Asserts vanish under
+    ``python -O`` and die as context-free ``AssertionError`` deep inside jit
+    traces; library validation raises ``ValueError`` with a message naming
+    the bad value and the expectation (the ``SearchConfig.__post_init__``
+    idiom). Tests are not scanned (pytest asserts are the point there).
+
+``key-reuse``
+    The same PRNG key variable consumed by two or more ``jax.random.*``
+    sampling calls within one statement block — the classic correlated-
+    randomness bug (keys must be ``split``/``fold_in``-derived per use).
+    Consumers in mutually exclusive branches are separate blocks, so an
+    if/else sharing one key is fine.
+
+``hardcoded-interpret``
+    ``interpret=True`` literal in a call: Pallas interpret mode must route
+    through :func:`repro.kernels.default_interpret` (CPU-only) so TPU runs
+    never silently fall back to the emulator.
+
+Suppression: append ``# repo-lint: allow-<rule>`` on the offending line for
+the rare legitimate case (e.g. the kernel-spec ``trace()`` thunks pass
+``interpret=True`` to an abstract trace that never executes).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from repro.analysis.baseline import Finding
+
+# jax.random samplers that CONSUME a key (reuse = correlated draws); split /
+# fold_in / wrap_key_data DERIVE keys and may see the same parent repeatedly.
+_CONSUMERS = {
+    "uniform", "normal", "bernoulli", "randint", "bits", "choice",
+    "permutation", "categorical", "gumbel", "truncated_normal", "exponential",
+    "laplace", "beta", "gamma", "poisson", "shuffle", "rademacher", "orthogonal",
+}
+
+
+def _allowed(src_lines: list[str], lineno: int, rule: str) -> bool:
+    if 1 <= lineno <= len(src_lines):
+        return f"repo-lint: allow-{rule}" in src_lines[lineno - 1]
+    return False
+
+
+def _random_consumer(call: ast.Call) -> str | None:
+    """'jax.random.uniform' / 'random.uniform' / 'jr.uniform' -> 'uniform'."""
+    fn = call.func
+    if not isinstance(fn, ast.Attribute) or fn.attr not in _CONSUMERS:
+        return None
+    base = fn.value
+    if isinstance(base, ast.Attribute) and base.attr == "random":
+        return fn.attr
+    if isinstance(base, ast.Name) and base.id in ("random", "jr", "jrandom"):
+        return fn.attr
+    return None
+
+
+def _key_arg(call: ast.Call) -> str | None:
+    if call.args and isinstance(call.args[0], ast.Name):
+        return call.args[0].id
+    for kw in call.keywords:
+        if kw.arg == "key" and isinstance(kw.value, ast.Name):
+            return kw.value.id
+    return None
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, rel: str, src_lines: list[str]):
+        self.rel = rel
+        self.lines = src_lines
+        self.findings: list[Finding] = []
+        self._block_uses: dict[tuple[int, str], list[int]] = {}
+
+    def _where(self, node) -> str:
+        return f"{self.rel}:{node.lineno}"
+
+    def visit_Assert(self, node: ast.Assert):
+        if not _allowed(self.lines, node.lineno, "assert"):
+            self.findings.append(Finding(
+                "lint", "bare-assert", self._where(node),
+                "assert in a library runtime path: raise ValueError with a "
+                "message (vanishes under -O; opaque inside jit traces)"))
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        consumer = _random_consumer(node)
+        if consumer is not None:
+            key = _key_arg(node)
+            if key is not None and not _allowed(self.lines, node.lineno,
+                                                "key-reuse"):
+                self._block_uses.setdefault(
+                    (self._block_id, key), []).append(node.lineno)
+        for kw in node.keywords:
+            if (kw.arg == "interpret"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True
+                    and not _allowed(self.lines, kw.value.lineno,
+                                     "interpret")):
+                self.findings.append(Finding(
+                    "lint", "hardcoded-interpret", self._where(kw.value),
+                    "interpret=True literal: route through "
+                    "repro.kernels.default_interpret() so accelerator runs "
+                    "never silently use the emulator"))
+        self.generic_visit(node)
+
+    # ---- statement-block bookkeeping: a "block" is one body list (module,
+    # function body, each if/else arm, each loop body...), identified by the
+    # id() of the list object while it is alive during the walk.
+    _block_id: int = 0
+
+    def generic_visit(self, node):
+        for field, value in ast.iter_fields(node):
+            if isinstance(value, list) and value and all(
+                    isinstance(v, ast.stmt) for v in value):
+                prev = self._block_id
+                self._block_id = id(value)
+                for v in value:
+                    self.visit(v)
+                self._block_id = prev
+            elif isinstance(value, list):
+                for v in value:
+                    if isinstance(v, ast.AST):
+                        self.visit(v)
+            elif isinstance(value, ast.AST):
+                self.visit(value)
+
+    def finish(self):
+        for (_, key), linenos in sorted(self._block_uses.items(),
+                                        key=lambda kv: kv[1][0]):
+            if len(linenos) >= 2:
+                self.findings.append(Finding(
+                    "lint", "key-reuse", f"{self.rel}:{linenos[1]}",
+                    f"PRNG key `{key}` consumed {len(linenos)}x in one "
+                    f"block (lines {linenos}): split/fold_in a fresh key "
+                    "per draw"))
+        return self.findings
+
+
+def lint_source(source: str, rel: str) -> list[Finding]:
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding("lint", "syntax-error", f"{rel}:{e.lineno}", str(e))]
+    v = _Visitor(rel, source.splitlines())
+    v.visit(tree)
+    return v.finish()
+
+
+def run(root: str | pathlib.Path | None = None, log=print) -> list[Finding]:
+    """Lint every ``.py`` under ``root`` (default: the installed
+    ``src/repro`` library tree)."""
+    if root is None:
+        root = pathlib.Path(__file__).resolve().parents[1]   # src/repro
+    root = pathlib.Path(root)
+    findings: list[Finding] = []
+    n_files = 0
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root.parent).as_posix()
+        findings.extend(lint_source(path.read_text(), rel))
+        n_files += 1
+    log(f"repo-lint: {n_files} files under {root}: "
+        f"{len(findings) or 'no'} finding{'s' if len(findings) != 1 else ''}")
+    return findings

@@ -94,9 +94,12 @@ def lm_smoke_batch(key, cfg: tf.TransformerConfig, shape: ShapeSpec) -> dict:
         return {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab, jnp.int32)}
     cache = tf.init_cache(cfg, b, LM_SMOKE["cache"])
     cache["pos"] = jnp.full((b,), LM_SMOKE["cache"] // 2, jnp.int32)
-    cache["k"] = jax.random.normal(key, cache["k"].shape, cfg.compute_dtype) * 0.02
-    cache["v"] = jax.random.normal(key, cache["v"].shape, cfg.compute_dtype) * 0.02
-    return {"tokens": jax.random.randint(key, (b,), 0, cfg.vocab, jnp.int32),
+    # distinct keys per draw: one key for k and v would fill both caches
+    # with bitwise-identical values
+    k_key, v_key, t_key = jax.random.split(key, 3)
+    cache["k"] = jax.random.normal(k_key, cache["k"].shape, cfg.compute_dtype) * 0.02
+    cache["v"] = jax.random.normal(v_key, cache["v"].shape, cfg.compute_dtype) * 0.02
+    return {"tokens": jax.random.randint(t_key, (b,), 0, cfg.vocab, jnp.int32),
             "cache": cache}
 
 

@@ -236,7 +236,10 @@ def _bucket_slots(ids: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
     2^k, so ids distinct mod n_buckets land in distinct slots — with
     n_buckets >= next_pow2(n) the mapping is injective and the bucketed merge
     is exactly the sort oracle."""
-    assert n_buckets & (n_buckets - 1) == 0, "n_buckets must be a power of two"
+    if n_buckets <= 0 or n_buckets & (n_buckets - 1) != 0:
+        raise ValueError(
+            f"n_buckets={n_buckets} must be a power of two (the slot mask "
+            "`h & (n_buckets - 1)` requires it)")
     h = ids.astype(jnp.uint32) * _SLOT_MULT
     return (h & jnp.uint32(n_buckets - 1)).astype(jnp.int32)
 
@@ -491,7 +494,9 @@ def merge_candidate_edges(
     ``merge`` selects the sort oracle or the scatter-bucketed fast path (see
     module docstring); ``n_buckets`` overrides the bucket width (power of two,
     default ``default_buckets(cap)``)."""
-    assert merge in MERGE_MODES, merge
+    if merge not in MERGE_MODES:
+        raise ValueError(
+            f"unknown merge mode {merge!r}: expected one of {MERGE_MODES}")
     n, m = g.neighbors.shape
     cap = m if cap is None else cap
     if merge == "bucketed":
@@ -521,7 +526,9 @@ def add_reverse_edges(
     ``merge="bucketed"`` runs both degree caps as per-vertex bucket scatters
     (in-degree: per-destination rows; out-degree: per-source rows) instead of
     two global lexsorts."""
-    assert merge in MERGE_MODES, merge
+    if merge not in MERGE_MODES:
+        raise ValueError(
+            f"unknown merge mode {merge!r}: expected one of {MERGE_MODES}")
     if merge == "bucketed":
         return _add_reverse_edges_bucketed(g, r, n_buckets)
     n, m = g.neighbors.shape

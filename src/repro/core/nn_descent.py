@@ -36,7 +36,10 @@ class NNDescentConfig:
     n_buckets: int | None = None
 
     def __post_init__(self):
-        assert self.merge in G.MERGE_MODES, self.merge
+        if self.merge not in G.MERGE_MODES:
+            raise ValueError(
+                f"unknown merge mode {self.merge!r}: expected one of "
+                f"{G.MERGE_MODES}")
 
 
 def random_init(key: jax.Array, x: jnp.ndarray, cfg: NNDescentConfig) -> G.Graph:

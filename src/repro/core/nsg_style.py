@@ -36,7 +36,10 @@ class NSGStyleConfig:
     n_buckets: int | None = None
 
     def __post_init__(self):
-        assert self.merge in G.MERGE_MODES, self.merge
+        if self.merge not in G.MERGE_MODES:
+            raise ValueError(
+                f"unknown merge mode {self.merge!r}: expected one of "
+                f"{G.MERGE_MODES}")
 
 
 def reachable_mask(g: G.Graph, entry: int | jnp.ndarray, iters: int) -> jnp.ndarray:

@@ -50,8 +50,16 @@ class RNNDescentConfig:
                                    # default graph.default_buckets(cap))
 
     def __post_init__(self):
-        assert self.capacity >= self.r, "capacity must hold R reverse edges"
-        assert self.merge in G.MERGE_MODES, self.merge
+        # config-time validation (ValueError, matching SearchConfig): a bad
+        # capacity/merge used to die as a bare AssertionError deep in a trace
+        if self.capacity < self.r:
+            raise ValueError(
+                f"capacity={self.capacity} must hold the R={self.r} reverse "
+                "edges added by AddReverseEdges (capacity >= r)")
+        if self.merge not in G.MERGE_MODES:
+            raise ValueError(
+                f"unknown merge mode {self.merge!r}: expected one of "
+                f"{G.MERGE_MODES}")
 
 
 def random_init(key: jax.Array, x: jnp.ndarray, cfg: RNNDescentConfig) -> G.Graph:

@@ -1,4 +1,4 @@
-from repro.kernels.beam_score.ops import beam_score
+from repro.kernels.beam_score.ops import beam_score, default_specs, kernel_spec
 from repro.kernels.beam_score.ref import beam_score_ref, score_block
 
-__all__ = ["beam_score", "beam_score_ref", "score_block"]
+__all__ = ["beam_score", "beam_score_ref", "score_block", "kernel_spec", "default_specs"]

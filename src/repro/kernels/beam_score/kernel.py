@@ -29,12 +29,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.graph import dist_key
 from repro.kernels.beam_score.ref import score_block
 
 
 def _beam_score_body(u_ref, q_ref, nbrs_ref, x_ref, keys_ref, ids_ref,
                      *, k: int, metric: str):
+    # Deferred: core.search imports this package, so a module-level
+    # core.graph import would make the package order-sensitive to load.
+    from repro.core.graph import dist_key
+
     tb = u_ref.shape[0]
     d = x_ref.shape[1]
 
@@ -65,6 +68,26 @@ def _beam_score_body(u_ref, q_ref, nbrs_ref, x_ref, keys_ref, ids_ref,
     ids_ref[...] = jnp.where(valid, nbrs, -1)
 
 
+def block_layout(b: int, n: int, m: int, d: int, k: int, tile_b: int):
+    """(inputs, outputs) block layout: ``(name, block_shape, index_map)``
+    triples — the single source consumed by both ``pallas_call`` below and
+    the exported spec metadata (``ops.kernel_spec``), so the statically
+    checked index maps are the ones the kernel actually runs with. The lane
+    tile strides over queries; adjacency and corpus are whole-array blocks
+    (the VMEM-resident-corpus contract in the module docstring)."""
+    inputs = (
+        ("u", (tile_b, 1), lambda i: (i, 0)),
+        ("queries", (tile_b, d), lambda i: (i, 0)),
+        ("neighbors", (n, m), lambda i: (0, 0)),
+        ("x", (n, d), lambda i: (0, 0)),
+    )
+    outputs = (
+        ("keys", (tile_b, k), lambda i: (i, 0)),
+        ("ids", (tile_b, k), lambda i: (i, 0)),
+    )
+    return inputs, outputs
+
+
 @functools.partial(jax.jit, static_argnames=("k", "metric", "tile_b", "interpret"))
 def beam_score_tiles(
     u2: jnp.ndarray,        # (B, 1) int32, B % tile_b == 0, values in [0, n)
@@ -80,21 +103,17 @@ def beam_score_tiles(
     b = u2.shape[0]
     n, m = neighbors.shape
     d = x.shape[1]
-    assert b % tile_b == 0
+    if b % tile_b != 0:
+        raise ValueError(
+            f"batch {b} is not a multiple of tile_b={tile_b} (ops.beam_score "
+            "pads before dispatching here)")
     grid = (b // tile_b,)
+    ins, outs = block_layout(b, n, m, d, k, tile_b)
     return pl.pallas_call(
         functools.partial(_beam_score_body, k=k, metric=metric),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tile_b, 1), lambda i: (i, 0)),
-            pl.BlockSpec((tile_b, d), lambda i: (i, 0)),
-            pl.BlockSpec((n, m), lambda i: (0, 0)),
-            pl.BlockSpec((n, d), lambda i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((tile_b, k), lambda i: (i, 0)),
-            pl.BlockSpec((tile_b, k), lambda i: (i, 0)),
-        ],
+        in_specs=[pl.BlockSpec(bs, im) for _, bs, im in ins],
+        out_specs=[pl.BlockSpec(bs, im) for _, bs, im in outs],
         out_shape=[
             jax.ShapeDtypeStruct((b, k), jnp.uint32),
             jax.ShapeDtypeStruct((b, k), jnp.int32),

@@ -6,9 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import graph as G
 from repro.kernels import default_interpret
-from repro.kernels.beam_score.kernel import beam_score_tiles
+from repro.kernels.beam_score.kernel import beam_score_tiles, block_layout
 from repro.kernels.beam_score.ref import beam_score_ref
 
 
@@ -53,7 +52,60 @@ def beam_score(
         u_p, q_p, neighbors, x, k=k, metric=metric, tile_b=tile_b,
         interpret=interpret)
     keys, ids = keys[:b], ids[:b]
+    from repro.core import graph as G  # deferred: core imports this package
     return ids, G.key_dist(keys), keys
 
 
-__all__ = ["beam_score", "beam_score_ref"]
+def kernel_spec(*, b: int = 128, n: int = 1024, m: int = 32, d: int = 64,
+                k: int = 16, tile_b: int = 64, metric: str = "l2",
+                gram_dtype: str = "f32"):
+    """Static :class:`repro.kernels.spec.KernelSpec` for one problem size —
+    consumed by ``repro.analysis.kernel_check`` (VMEM bound, index-map
+    in-bounds proof, f32-accumulator rule under ``gram_dtype="bf16"``)."""
+    from repro.kernels.spec import BlockMeta, KernelSpec
+
+    xdt = jnp.bfloat16 if gram_dtype == "bf16" else jnp.float32
+    ins, outs = block_layout(b, n, m, d, k, tile_b)
+    shapes = {
+        "u": ((b, 1), jnp.int32),
+        "queries": ((b, d), jnp.float32),
+        "neighbors": ((n, m), jnp.int32),
+        "x": ((n, d), xdt),
+        "keys": ((b, k), jnp.uint32),
+        "ids": ((b, k), jnp.int32),
+    }
+    meta = lambda trips: tuple(
+        BlockMeta(nm, shapes[nm][0], bs, shapes[nm][1], im)
+        for nm, bs, im in trips)
+
+    def trace():
+        args = [jax.ShapeDtypeStruct(*shapes[nm]) for nm, _, _ in ins]
+        return jax.make_jaxpr(functools.partial(
+            beam_score_tiles, k=k, metric=metric, tile_b=tile_b,
+            interpret=True,  # repo-lint: allow-interpret (abstract trace only)
+        ))(*args)
+
+    return KernelSpec(
+        name=f"beam_score[{metric},{gram_dtype}]",
+        grid=(b // tile_b,),
+        inputs=meta(ins),
+        outputs=meta(outs),
+        trace=trace,
+        low_precision_inputs=("x",) if gram_dtype == "bf16" else (),
+    )
+
+
+def default_specs():
+    """Representative spec instances checked in CI: the docstring's VMEM
+    budget point (tile_b=64, K=32, d=128) in both gram dtypes and metrics."""
+    return [
+        kernel_spec(b=256, n=2048, m=64, d=128, k=32, tile_b=64,
+                    metric="l2", gram_dtype="f32"),
+        kernel_spec(b=256, n=2048, m=64, d=128, k=32, tile_b=64,
+                    metric="cos", gram_dtype="bf16"),
+        kernel_spec(b=64, n=512, m=16, d=32, k=8, tile_b=64, metric="ip",
+                    gram_dtype="f32"),
+    ]
+
+
+__all__ = ["beam_score", "beam_score_ref", "kernel_spec", "default_specs"]

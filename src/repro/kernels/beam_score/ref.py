@@ -15,8 +15,6 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import graph as G
-
 
 def score_block(vecs: jnp.ndarray, q: jnp.ndarray, metric: str) -> jnp.ndarray:
     """(..., K, d) gathered neighbor block x (..., d) queries -> (..., K) f32
@@ -64,6 +62,10 @@ def beam_score_ref(
     (:func:`repro.core.graph.dist_key` — ready for key-ordered merge or the
     hashed visited-table probe).
     """
+    # Deferred: core.search imports this package, so a module-level
+    # core.graph import would make the package order-sensitive to load.
+    from repro.core import graph as G
+
     if gram_dtype == "bf16":
         x = x.astype(jnp.bfloat16)
     nbrs = neighbors[u][:, :k]                       # Eq. 4 prefix slice

@@ -1,4 +1,4 @@
-from repro.kernels.fm_interact.ops import fm_interact
+from repro.kernels.fm_interact.ops import fm_interact, default_specs, kernel_spec
 from repro.kernels.fm_interact.ref import fm_interact_ref
 
-__all__ = ["fm_interact", "fm_interact_ref"]
+__all__ = ["fm_interact", "fm_interact_ref", "kernel_spec", "default_specs"]

@@ -23,6 +23,18 @@ def _fm_body(emb_ref, o_ref):
     o_ref[...] = 0.5 * jnp.sum(s * s - ss, axis=-1, keepdims=True)
 
 
+def block_layout(b: int, f: int, d: int, tile_b: int):
+    """(inputs, outputs) ``(name, block_shape, index_map)`` triples — single
+    source for both ``pallas_call`` and ``ops.kernel_spec``."""
+    inputs = (
+        ("emb", (tile_b, f, d), lambda i: (i, 0, 0)),
+    )
+    outputs = (
+        ("out", (tile_b, 1), lambda i: (i, 0)),
+    )
+    return inputs, outputs
+
+
 @functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
 def fm_interact_tiles(
     emb: jnp.ndarray, tile_b: int = 512, interpret: bool | None = None
@@ -32,12 +44,16 @@ def fm_interact_tiles(
         from repro.kernels import default_interpret
         interpret = default_interpret()
     b, f, d = emb.shape
-    assert b % tile_b == 0
+    if b % tile_b != 0:
+        raise ValueError(
+            f"batch {b} is not a multiple of tile_b={tile_b} "
+            "(ops.fm_interact pads before dispatching here)")
+    ins, outs = block_layout(b, f, d, tile_b)
     return pl.pallas_call(
         _fm_body,
         grid=(b // tile_b,),
-        in_specs=[pl.BlockSpec((tile_b, f, d), lambda i: (i, 0, 0))],
-        out_specs=pl.BlockSpec((tile_b, 1), lambda i: (i, 0)),
+        in_specs=[pl.BlockSpec(bs, im) for _, bs, im in ins],
+        out_specs=pl.BlockSpec(outs[0][1], outs[0][2]),
         out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
         interpret=interpret,
     )(emb)

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import default_interpret
-from repro.kernels.fm_interact.kernel import fm_interact_tiles
+from repro.kernels.fm_interact.kernel import block_layout, fm_interact_tiles
 from repro.kernels.fm_interact.ref import fm_interact_ref
 
 
@@ -23,4 +23,46 @@ def fm_interact(emb: jnp.ndarray, tile_b: int = 512, interpret: bool | None = No
     return fm_interact_tiles(emb_p, tile_b=tile_b, interpret=interpret)[:b, 0]
 
 
-__all__ = ["fm_interact", "fm_interact_ref"]
+def kernel_spec(*, b: int = 1024, f: int = 32, d: int = 16,
+                tile_b: int = 512, emb_dtype: str = "f32"):
+    """Static :class:`repro.kernels.spec.KernelSpec` for one problem size —
+    consumed by ``repro.analysis.kernel_check``."""
+    from repro.kernels.spec import BlockMeta, KernelSpec
+
+    edt = jnp.bfloat16 if emb_dtype == "bf16" else jnp.float32
+    ins, outs = block_layout(b, f, d, tile_b)
+    shapes = {
+        "emb": ((b, f, d), edt),
+        "out": ((b, 1), jnp.float32),
+    }
+    meta = lambda trips: tuple(
+        BlockMeta(nm, shapes[nm][0], bs, shapes[nm][1], im)
+        for nm, bs, im in trips)
+
+    def trace():
+        args = [jax.ShapeDtypeStruct(*shapes[nm]) for nm, _, _ in ins]
+        return jax.make_jaxpr(functools.partial(
+            fm_interact_tiles, tile_b=tile_b,
+            interpret=True,  # repo-lint: allow-interpret (abstract trace only)
+        ))(*args)
+
+    return KernelSpec(
+        name=f"fm_interact[{emb_dtype}]",
+        grid=(b // tile_b,),
+        inputs=meta(ins),
+        outputs=meta(outs),
+        trace=trace,
+        low_precision_inputs=("emb",) if emb_dtype == "bf16" else (),
+    )
+
+
+def default_specs():
+    """Representative spec instances checked in CI: the serve_bulk tile
+    (tb=512) at recsys field/embedding sizes, f32 and bf16 embeddings."""
+    return [
+        kernel_spec(b=2048, f=32, d=16, tile_b=512, emb_dtype="f32"),
+        kernel_spec(b=2048, f=32, d=16, tile_b=512, emb_dtype="bf16"),
+    ]
+
+
+__all__ = ["fm_interact", "fm_interact_ref", "kernel_spec", "default_specs"]

@@ -1,4 +1,4 @@
-from repro.kernels.pairwise_l2.ops import pairwise_l2
+from repro.kernels.pairwise_l2.ops import pairwise_l2, default_specs, kernel_spec
 from repro.kernels.pairwise_l2.ref import pairwise_l2_ref
 
-__all__ = ["pairwise_l2", "pairwise_l2_ref"]
+__all__ = ["pairwise_l2", "pairwise_l2_ref", "kernel_spec", "default_specs"]

@@ -31,6 +31,20 @@ def _pairwise_l2_body(a_ref, b_ref, o_ref):
     o_ref[...] = jnp.maximum(an + bn.T - 2.0 * dot, 0.0)
 
 
+def block_layout(na: int, nb: int, d: int, tile_m: int, tile_n: int):
+    """(inputs, outputs) ``(name, block_shape, index_map)`` triples — single
+    source for both ``pallas_call`` and ``ops.kernel_spec``. A strides the
+    row axis, B the column axis, full-d blocks per the tiling rules above."""
+    inputs = (
+        ("a", (tile_m, d), lambda i, j: (i, 0)),
+        ("b", (tile_n, d), lambda i, j: (j, 0)),
+    )
+    outputs = (
+        ("out", (tile_m, tile_n), lambda i, j: (i, j)),
+    )
+    return inputs, outputs
+
+
 @functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "interpret"))
 def pairwise_l2_tiles(
     a: jnp.ndarray, b: jnp.ndarray,
@@ -42,16 +56,18 @@ def pairwise_l2_tiles(
         interpret = default_interpret()
     na, d = a.shape
     nb = b.shape[0]
-    assert na % tile_m == 0 and nb % tile_n == 0
+    if na % tile_m != 0 or nb % tile_n != 0:
+        raise ValueError(
+            f"shapes ({na}, {nb}) are not multiples of tiles "
+            f"({tile_m}, {tile_n}) (ops.pairwise_l2 pads before dispatching "
+            "here)")
     grid = (na // tile_m, nb // tile_n)
+    ins, outs = block_layout(na, nb, d, tile_m, tile_n)
     return pl.pallas_call(
         _pairwise_l2_body,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tile_m, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((tile_n, d), lambda i, j: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        in_specs=[pl.BlockSpec(bs, im) for _, bs, im in ins],
+        out_specs=pl.BlockSpec(outs[0][1], outs[0][2]),
         out_shape=jax.ShapeDtypeStruct((na, nb), jnp.float32),
         interpret=interpret,
     )(a, b)

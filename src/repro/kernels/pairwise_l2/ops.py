@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import default_interpret
-from repro.kernels.pairwise_l2.kernel import pairwise_l2_tiles
+from repro.kernels.pairwise_l2.kernel import block_layout, pairwise_l2_tiles
 from repro.kernels.pairwise_l2.ref import pairwise_l2_ref
 
 
@@ -31,4 +31,50 @@ def pairwise_l2(
     return out[:na, :nb]
 
 
-__all__ = ["pairwise_l2", "pairwise_l2_ref"]
+def kernel_spec(*, na: int = 512, nb: int = 512, d: int = 64,
+                tile_m: int = 256, tile_n: int = 256,
+                in_dtype: str = "f32"):
+    """Static :class:`repro.kernels.spec.KernelSpec` for one problem size —
+    consumed by ``repro.analysis.kernel_check``."""
+    from repro.kernels.spec import BlockMeta, KernelSpec
+
+    idt = jnp.bfloat16 if in_dtype == "bf16" else jnp.float32
+    ins, outs = block_layout(na, nb, d, tile_m, tile_n)
+    shapes = {
+        "a": ((na, d), idt),
+        "b": ((nb, d), idt),
+        "out": ((na, nb), jnp.float32),
+    }
+    meta = lambda trips: tuple(
+        BlockMeta(nm, shapes[nm][0], bs, shapes[nm][1], im)
+        for nm, bs, im in trips)
+
+    def trace():
+        args = [jax.ShapeDtypeStruct(*shapes[nm]) for nm, _, _ in ins]
+        return jax.make_jaxpr(functools.partial(
+            pairwise_l2_tiles, tile_m=tile_m, tile_n=tile_n,
+            interpret=True,  # repo-lint: allow-interpret (abstract trace only)
+        ))(*args)
+
+    return KernelSpec(
+        name=f"pairwise_l2[{in_dtype}]",
+        grid=(na // tile_m, nb // tile_n),
+        inputs=meta(ins),
+        outputs=meta(outs),
+        trace=trace,
+        low_precision_inputs=("a", "b") if in_dtype == "bf16" else (),
+    )
+
+
+def default_specs():
+    """Representative spec instances checked in CI: the docstring's budget
+    point (256x256 tiles, d near the 1024 ceiling) in both input dtypes."""
+    return [
+        kernel_spec(na=1024, nb=768, d=960, tile_m=256, tile_n=256,
+                    in_dtype="f32"),
+        kernel_spec(na=1024, nb=768, d=960, tile_m=256, tile_n=256,
+                    in_dtype="bf16"),
+    ]
+
+
+__all__ = ["pairwise_l2", "pairwise_l2_ref", "kernel_spec", "default_specs"]

@@ -1,4 +1,4 @@
-from repro.kernels.rng_prune.ops import rng_prune
+from repro.kernels.rng_prune.ops import rng_prune, default_specs, kernel_spec
 from repro.kernels.rng_prune.ref import rng_prune_ref
 
-__all__ = ["rng_prune", "rng_prune_ref"]
+__all__ = ["rng_prune", "rng_prune_ref", "kernel_spec", "default_specs"]

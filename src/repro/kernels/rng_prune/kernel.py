@@ -62,6 +62,25 @@ def _rng_prune_body(ids_ref, dists_ref, flags_ref, vecs_ref, keep_ref, redw_ref,
     redd_ref[...] = jnp.where(red_d >= big, jnp.inf, red_d)
 
 
+def block_layout(n: int, m: int, d: int, tile_c: int):
+    """(inputs, outputs) ``(name, block_shape, index_map)`` triples — single
+    source for both ``pallas_call`` and the exported spec metadata
+    (``ops.kernel_spec``). Everything tiles over vertex rows."""
+    row = lambda i: (i, 0)
+    inputs = (
+        ("ids", (tile_c, m), row),
+        ("dists", (tile_c, m), row),
+        ("flags", (tile_c, m), row),
+        ("vecs", (tile_c, m, d), lambda i: (i, 0, 0)),
+    )
+    outputs = (
+        ("keep", (tile_c, m), row),
+        ("red_w", (tile_c, m), row),
+        ("red_d", (tile_c, m), row),
+    )
+    return inputs, outputs
+
+
 @functools.partial(jax.jit, static_argnames=("tile_c", "interpret"))
 def rng_prune_tiles(
     ids: jnp.ndarray, dists: jnp.ndarray, flags: jnp.ndarray, vecs: jnp.ndarray,
@@ -73,22 +92,17 @@ def rng_prune_tiles(
         interpret = default_interpret()
     n, m = ids.shape
     d = vecs.shape[-1]
-    assert n % tile_c == 0
+    if n % tile_c != 0:
+        raise ValueError(
+            f"row count {n} is not a multiple of tile_c={tile_c} "
+            "(ops.rng_prune pads before dispatching here)")
     grid = (n // tile_c,)
+    ins, outs = block_layout(n, m, d, tile_c)
     return pl.pallas_call(
         _rng_prune_body,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tile_c, m), lambda i: (i, 0)),
-            pl.BlockSpec((tile_c, m), lambda i: (i, 0)),
-            pl.BlockSpec((tile_c, m), lambda i: (i, 0)),
-            pl.BlockSpec((tile_c, m, d), lambda i: (i, 0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((tile_c, m), lambda i: (i, 0)),
-            pl.BlockSpec((tile_c, m), lambda i: (i, 0)),
-            pl.BlockSpec((tile_c, m), lambda i: (i, 0)),
-        ],
+        in_specs=[pl.BlockSpec(bs, im) for _, bs, im in ins],
+        out_specs=[pl.BlockSpec(bs, im) for _, bs, im in outs],
         out_shape=[
             jax.ShapeDtypeStruct((n, m), jnp.uint8),
             jax.ShapeDtypeStruct((n, m), jnp.int32),

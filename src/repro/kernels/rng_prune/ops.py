@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import default_interpret
-from repro.kernels.rng_prune.kernel import rng_prune_tiles
+from repro.kernels.rng_prune.kernel import block_layout, rng_prune_tiles
 from repro.kernels.rng_prune.ref import rng_prune_ref
 
 
@@ -46,4 +46,53 @@ def rng_prune(
     return keep[:n].astype(bool), red_w[:n], red_d[:n]
 
 
-__all__ = ["rng_prune", "rng_prune_ref"]
+def kernel_spec(*, n: int = 64, m: int = 32, d: int = 64, tile_c: int = 8,
+                gram_dtype: str = "f32"):
+    """Static :class:`repro.kernels.spec.KernelSpec` for one problem size —
+    consumed by ``repro.analysis.kernel_check``. Under ``gram_dtype="bf16"``
+    the gathered ``vecs`` arrive low-precision and the checker enforces that
+    the in-kernel Gram still accumulates in f32."""
+    from repro.kernels.spec import BlockMeta, KernelSpec
+
+    vdt = jnp.bfloat16 if gram_dtype == "bf16" else jnp.float32
+    ins, outs = block_layout(n, m, d, tile_c)
+    shapes = {
+        "ids": ((n, m), jnp.int32),
+        "dists": ((n, m), jnp.float32),
+        "flags": ((n, m), jnp.uint8),
+        "vecs": ((n, m, d), vdt),
+        "keep": ((n, m), jnp.uint8),
+        "red_w": ((n, m), jnp.int32),
+        "red_d": ((n, m), jnp.float32),
+    }
+    meta = lambda trips: tuple(
+        BlockMeta(nm, shapes[nm][0], bs, shapes[nm][1], im)
+        for nm, bs, im in trips)
+
+    def trace():
+        args = [jax.ShapeDtypeStruct(*shapes[nm]) for nm, _, _ in ins]
+        return jax.make_jaxpr(functools.partial(
+            rng_prune_tiles, tile_c=tile_c,
+            interpret=True,  # repo-lint: allow-interpret (abstract trace only)
+        ))(*args)
+
+    return KernelSpec(
+        name=f"rng_prune[{gram_dtype}]",
+        grid=(n // tile_c,),
+        inputs=meta(ins),
+        outputs=meta(outs),
+        trace=trace,
+        low_precision_inputs=("vecs",) if gram_dtype == "bf16" else (),
+    )
+
+
+def default_specs():
+    """Representative spec instances checked in CI: the docstring's VMEM
+    budget point (tc=8, M=128, d=960) in f32 plus the bf16-gather variant."""
+    return [
+        kernel_spec(n=64, m=128, d=960, tile_c=8, gram_dtype="f32"),
+        kernel_spec(n=64, m=128, d=960, tile_c=8, gram_dtype="bf16"),
+    ]
+
+
+__all__ = ["rng_prune", "rng_prune_ref", "kernel_spec", "default_specs"]

@@ -1,0 +1,94 @@
+"""Static kernel-spec metadata exported by every kernel package.
+
+Each kernel package (``beam_score``, ``rng_prune``, ``pairwise_l2``,
+``fm_interact``) exports a ``kernel_spec(...)`` constructor returning a
+:class:`KernelSpec` — the statically-checkable contract of one
+``pallas_call``: the grid, every input/output block (array shape, block
+shape, dtype, and the *same* index-map callables the kernel passes to
+``pl.BlockSpec``), and a ``trace`` thunk that abstract-traces the kernel so
+the body jaxpr can be inspected without running anything.
+
+The spec is the machine-readable half of the comment-block "VMEM budget"
+math every kernel module carries: ``repro.analysis.kernel_check`` consumes it
+to (a) bound the per-grid-step VMEM footprint, (b) evaluate every index map
+over the full grid and prove each tile lands in bounds, and (c) walk the
+traced kernel body for the f32-accumulator rule under low-precision
+(``gram_dtype="bf16"``) inputs.
+
+To keep the spec honest, kernel modules define their block layout ONCE in a
+module-level function consumed by both ``pl.pallas_call`` and
+``kernel_spec`` — the checker then audits the exact index maps the kernel
+runs with, not a restated copy that could drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockMeta:
+    """One pallas_call operand/result: the full array, its VMEM block, and
+    the grid-index -> block-index map (exactly what ``pl.BlockSpec`` holds,
+    plus the array shape/dtype the map must stay inside)."""
+
+    name: str
+    array_shape: tuple[int, ...]
+    block_shape: tuple[int, ...]
+    dtype: Any                               # jnp dtype (e.g. jnp.float32)
+    index_map: Callable[..., tuple[int, ...]]
+
+    @property
+    def block_bytes(self) -> int:
+        return math.prod(self.block_shape) * jax.dtypes.canonicalize_dtype(
+            self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Statically-checkable contract of one pallas_call instance.
+
+    ``trace`` returns the ClosedJaxpr of the jitted kernel wrapper applied to
+    abstract (ShapeDtypeStruct) arguments — it never compiles or executes.
+    ``accum_dtype`` names the dtype every MXU contraction inside the body
+    must accumulate in (the f32-accumulator rule: bf16 inputs may only feed
+    dots whose output is f32). ``vmem_limit_bytes`` is the budget the summed
+    block footprint is checked against (TPU v5e VMEM = 16 MiB in the kernel
+    docstrings' math)."""
+
+    name: str
+    grid: tuple[int, ...]
+    inputs: tuple[BlockMeta, ...]
+    outputs: tuple[BlockMeta, ...]
+    trace: Callable[[], jax.core.ClosedJaxpr]
+    accum_dtype: str = "float32"
+    low_precision_inputs: tuple[str, ...] = ()   # names gathered as bf16
+    vmem_limit_bytes: int = 16 * 1024 * 1024
+
+    @property
+    def blocks(self) -> tuple[BlockMeta, ...]:
+        return self.inputs + self.outputs
+
+    @property
+    def vmem_block_bytes(self) -> int:
+        """Summed per-grid-step block footprint (inputs + outputs). A lower
+        bound on live VMEM — scratch and double-buffering ride on top — but
+        the number the 16 MiB budget math in the kernel docstrings uses."""
+        return sum(b.block_bytes for b in self.blocks)
+
+
+def grid_points(grid: tuple[int, ...], cap: int = 4096):
+    """Iterate the full grid index space, or a deterministic boundary subset
+    (first/last two per axis) when the full product exceeds ``cap`` — index
+    maps in this repo are affine, so corners + edges witness any OOB."""
+    total = math.prod(grid) if grid else 1
+    if total <= cap:
+        import itertools
+        yield from itertools.product(*(range(g) for g in grid))
+        return
+    import itertools
+    axis_pts = [sorted({0, 1, max(0, g - 2), g - 1}) for g in grid]
+    yield from itertools.product(*axis_pts)

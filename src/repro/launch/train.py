@@ -40,7 +40,8 @@ def main():
         from repro.launch.mesh import make_production_mesh
         mesh = make_production_mesh()
     bound = steps_mod.bind(arch, args.shape, reduced=args.reduced, mesh=mesh)
-    assert bound.kind == "train", f"{args.shape} is not a training shape"
+    if bound.kind != "train":
+        raise ValueError(f"{args.shape} is not a training shape")
 
     step_fn = jax.jit(bound.step_fn, donate_argnums=0)
 

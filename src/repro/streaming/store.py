@@ -103,7 +103,10 @@ def from_built(x: jnp.ndarray, g: G.Graph,
     """Wrap a batch-built (x, graph) pair into a padded store (rows [0, n)
     occupied, nothing tombstoned, epoch 0)."""
     n = x.shape[0]
-    assert g.n == n, (g.n, n)
+    if g.n != n:
+        raise ValueError(
+            f"graph has {g.n} rows but the corpus has {n}: from_built "
+            "expects the (x, graph) pair of one batch build")
     cap = next_capacity(n if capacity is None else max(capacity, n))
     return Store(
         x=jnp.pad(x.astype(jnp.float32), ((0, cap - n), (0, 0))),

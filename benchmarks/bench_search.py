@@ -60,10 +60,30 @@ def _update_root(**sections) -> None:
     common.save_root_json("BENCH_search.json", payload)
 
 
-def fused_rows(l_values=(16, 32), built=None) -> list[dict]:
-    """Baseline (jnp-ref) vs fused (Pallas) QPS + parity per dataset, on the
-    rnn-descent graph through the tiled serving driver. Writes the repo-root
-    BENCH_search.json trajectory (committed, compared across PRs).
+def _exec_modes() -> tuple[str, str]:
+    """(ref, fused) execution-mode labels for the current backend. The jnp
+    reference always compiles through XLA; the Pallas kernel compiles to
+    Mosaic on TPU but can only *interpret* on CPU — so CPU rows carry both a
+    compiled (non-interpret) measurement and an interpret measurement side by
+    side, labeled, instead of a single ambiguous qps pair."""
+    import jax
+    cpu = jax.default_backend() == "cpu"
+    return "compiled-xla", ("pallas-interpret" if cpu else "pallas-mosaic")
+
+
+def fused_rows(l_values=(8, 16, 32, 64), built=None) -> list[dict]:
+    """Baseline (jnp-ref, compiled) vs fused (Pallas) QPS + parity per
+    dataset, on the rnn-descent graph through the tiled serving driver.
+    Writes the repo-root BENCH_search.json trajectory (committed, compared
+    across PRs).
+
+    Each row is labeled with its execution modes (``exec_ref`` /
+    ``exec_fused``) and carries the *actual* per-row serving geometry —
+    ``slots`` from :func:`repro.core.search.resolve_slots` on that row's
+    config and ``tile_lanes`` as the realized tile width — so
+    ``visited_bytes_per_tile`` varies with L as the table really does
+    (4096 slots at L=8 up to 16384 at L=64 with k=32) instead of echoing
+    one constant for the whole sweep.
 
     ``built`` maps dataset name -> (x, q, gt, graph) to reuse graphs a caller
     already constructed (run() passes its figure-2 builds — construction
@@ -71,6 +91,7 @@ def fused_rows(l_values=(16, 32), built=None) -> list[dict]:
     from repro.core import eval as E
     from repro.core import search as S
 
+    exec_ref, exec_fused = _exec_modes()
     rows = []
     for ds in _figure2_datasets():
         if built and ds in built:
@@ -86,23 +107,29 @@ def fused_rows(l_values=(16, 32), built=None) -> list[dict]:
                 S.search_tiled, x, g, q, ep, base, tile_b=256, repeats=2)
             sec_f, (ids_f, _) = E.timed(
                 S.search_tiled, x, g, q, ep, fused, tile_b=256, repeats=2)
+            lanes = min(256, q.shape[0])
             row = {
                 "bench": "search-fused", "dataset": ds,
-                "method": "rnn-descent", "L": L,
+                "method": "rnn-descent", "L": L, "n": int(x.shape[0]),
+                "exec_ref": exec_ref, "exec_fused": exec_fused,
                 "qps_ref": round(q.shape[0] / sec_b, 1),
                 "qps_fused": round(q.shape[0] / sec_f, 1),
                 "parity": bool(np.array_equal(np.asarray(ids_b),
                                               np.asarray(ids_f))),
                 "recall_at_1": round(E.recall_at_k(ids_b, gt), 4),
+                "slots": S.resolve_slots(base),
+                "tile_lanes": lanes,
                 "visited_bytes_per_tile": S.visited_state_bytes(
-                    base, x.shape[0], min(256, q.shape[0])),
+                    base, x.shape[0], lanes),
             }
             rows.append(row)
             common.emit(
                 f"search/fused/{ds}/L{L}",
                 1e6 / max(row["qps_fused"], 1e-9),
-                f"qps_ref={row['qps_ref']},qps_fused={row['qps_fused']},"
-                f"parity={row['parity']},recall@1={row['recall_at_1']}",
+                f"qps_ref={row['qps_ref']}({exec_ref}),"
+                f"qps_fused={row['qps_fused']}({exec_fused}),"
+                f"parity={row['parity']},recall@1={row['recall_at_1']},"
+                f"slots={row['slots']}",
             )
     _update_root(fused_rows=rows)
     return rows

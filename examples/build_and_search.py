@@ -53,6 +53,42 @@ The demo below runs the sharded paths on whatever devices exist (1 on a
 plain CPU — still the full code path, degenerate exchange) and asserts
 build parity.
 
+Compressed corpora
+------------------
+The f32 corpus is the binding memory term at scale: ``n * d * 4`` bytes per
+device (replicated for serving). ``repro.quant`` stores codes instead and
+the fused kernels decode in-register next to the distance math:
+
+    ============  ================  =========================  ============
+    mode          per-row payload   O(1) auxiliary             n=1M, d=128
+    ============  ================  =========================  ============
+    f32           ``d * 4``         —                          512 MiB
+    int8          ``d``             scale+zero: ``2 * d * 4``  128 MiB (4x)
+    pq            ``m``             codebooks: ``256 * d * 4`` 32 MiB (16x
+                                                               at m = d/4)
+    ============  ================  =========================  ============
+
+    quant = Quantization(mode="int8")            # or mode="pq", m=d//4
+    bcfg  = dataclasses.replace(cfg, quant=quant)  # graph built in the
+    g     = rd.build(x, bcfg, key)                 #   quantized geometry
+    qx    = encode_corpus(x, quant)
+    scfg  = S.SearchConfig(l=48, k=32, quant=quant)
+    ids, d = S.search_tiled(x, g, q, entry, scfg, qx=qx)
+
+Tuning: ``m`` must divide d — ``d // 4`` gives 16x payload compression and
+is the benched sweet spot (smaller m compresses harder but each dropped
+subspace costs recall). ``rerank_k`` (default 64) is the exact-f32 rerank
+tail over the final candidates: it cancels most of the quantization noise
+in the *ranking* (the graph walk still navigates coded distances), so keep
+it 4-8x topk; ``rerank_k=0`` disables the tail and shows the raw coded
+recall (BENCH_quant.json records both). int8 costs ~0.01-0.03 recall@10 and
+needs no tuning; PQ+rerank lands within 0.05 at 16x. Build with the same
+``quant=`` you serve with — the builders construct the graph over the
+*decoded* corpus so edges are optimized for the distances coded search
+actually sees. Fused kernels (``use_pallas=True``) gather code rows (4-16x
+less HBM traffic than f32 rows) and stay bitwise-equal to the jnp decode
+oracles (tests/test_quant.py).
+
 Streaming updates
 -----------------
 Production corpora churn; ``repro.streaming`` maintains the index
@@ -173,3 +209,21 @@ ids_s, _ = ann.search(q, dataclasses.replace(scfg, topk=10))
 print(f"streaming churn           +{x.shape[0]-n0} pts in {ins_sec:5.2f}s  "
       f"-{n0 // 10} tombstoned  recall@10 "
       f"{E.recall_topk(ids_s, gt_si, valid=live):.4f}  epoch {ann.epoch}")
+
+# compressed corpora (see "Compressed corpora" above): serve the rnn-descent
+# graph from int8 and PQ codes — fused decode+score kernels, exact-f32
+# rerank tail — and compare payload bytes and recall against the f32 rows
+from repro.quant import Quantization, corpus_bytes, encode_corpus
+
+r1_f32 = E.evaluate_search(x, last_graph, q, gt, scfg,
+                           entry_points=entry, tile_b=128)["recall_at_1"]
+for quant in (Quantization(mode="int8"), Quantization(mode="pq", m=24)):
+    qx = encode_corpus(x, quant)
+    mem = corpus_bytes(qx, x.shape[0], x.shape[1])
+    qcfg = dataclasses.replace(scfg, quant=quant)
+    ids_q, _ = S.search_tiled(x, last_graph, q, entry, qcfg, tile_b=128,
+                              qx=qx)
+    print(f"quantized[{quant.mode:4s}]          recall@1 "
+          f"{E.recall_at_k(ids_q, gt):.4f} (f32 {r1_f32:.4f})  payload "
+          f"{mem['payload_ratio']:.0f}x smaller  aux "
+          f"{mem['aux_bytes'] / 1024:.0f} KiB")

@@ -83,3 +83,22 @@ print(f"  streaming churn (+1000/-500): recall@10="
       f"{E.recall_topk(ids_s, gt_si, valid=live):.4f}  "
       f"epoch={ann.epoch}  live={ann.live}/{ann.capacity} rows")
 assert not np.any(np.isin(np.asarray(ids_s), np.arange(500)))  # never surface
+
+# 7. compressed corpus: store int8 or PQ codes instead of f32 rows and let
+# the fused kernels decode in-register next to the distance math. One
+# Quantization object selects the representation everywhere (builder and
+# search configs); coded searches finish with an exact-f32 rerank tail over
+# the top rerank_k candidates, which is what keeps PQ recall close to f32.
+from repro.quant import Quantization, corpus_bytes, encode_corpus
+
+for quant in (Quantization(mode="int8"), Quantization(mode="pq", m=32)):
+    qx = encode_corpus(x, quant)
+    mem = corpus_bytes(qx, x.shape[0], x.shape[1])
+    qcfg = S.SearchConfig(l=32, k=32, max_iters=96, quant=quant)
+    ids_q, _ = S.search_tiled(x, graph, queries, entry, qcfg, tile_b=128,
+                              qx=qx)
+    print(f"  quantized[{quant.mode:4s}]: recall@1="
+          f"{E.recall_at_k(ids_q, gt):.4f}  payload "
+          f"{mem['payload_ratio']:.0f}x smaller "
+          f"({mem['codes_bytes'] / 2**20:.1f} MiB vs "
+          f"{mem['f32_bytes'] / 2**20:.1f} MiB f32)")

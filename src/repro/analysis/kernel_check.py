@@ -32,7 +32,7 @@ from repro.analysis.baseline import Finding
 from repro.analysis.jaxpr_audit import audit_closed_jaxpr, iter_jaxprs
 from repro.kernels.spec import BlockMeta, KernelSpec, grid_points
 
-_LOWP = {"bfloat16", "float16"}
+_LOWP = {"bfloat16", "float16", "int8", "uint8"}
 
 
 def all_specs() -> list[KernelSpec]:

@@ -179,6 +179,69 @@ def _trace_search_tiled_sharded():
     )(_x(), _graph(), _queries(), valid)
 
 
+def _qx_int8():
+    from repro.quant import QuantizedCorpus
+    return QuantizedCorpus(
+        codes=jax.ShapeDtypeStruct((N, D), jnp.int8),
+        scale=jax.ShapeDtypeStruct((D,), jnp.float32),
+        zero=jax.ShapeDtypeStruct((D,), jnp.float32),
+    )
+
+
+def _qx_pq(m=2):
+    from repro.quant import QuantizedCorpus
+    return QuantizedCorpus(
+        codes=jax.ShapeDtypeStruct((N, m), jnp.uint8),
+        codebooks=jax.ShapeDtypeStruct((m, 256, D // m), jnp.float32),
+    )
+
+
+def _quant(mode, **kw):
+    from repro.quant import Quantization
+    return Quantization(mode=mode, **kw)
+
+
+def _trace_search_int8():
+    from repro.core import search as S
+    cfg = _search_cfg(quant=_quant("int8", rerank_k=4))
+    return jax.make_jaxpr(
+        lambda x, g, q, qx: S.search(x, g, q, jnp.int32(0), cfg, qx=qx)
+    )(_x(), _graph(), _queries(), _qx_int8())
+
+
+def _trace_search_int8_pallas():
+    from repro.core import search as S
+    cfg = _search_cfg(quant=_quant("int8", rerank_k=4), use_pallas=True,
+                      kernel_tile_b=4)
+    return jax.make_jaxpr(
+        lambda x, g, q, qx: S.search(x, g, q, jnp.int32(0), cfg, qx=qx)
+    )(_x(), _graph(), _queries(), _qx_int8())
+
+
+def _trace_search_pq():
+    from repro.core import search as S
+    cfg = _search_cfg(quant=_quant("pq", m=2, rerank_k=4))
+    return jax.make_jaxpr(
+        lambda x, g, q, qx: S.search(x, g, q, jnp.int32(0), cfg, qx=qx)
+    )(_x(), _graph(), _queries(), _qx_pq())
+
+
+def _trace_search_tiled_pq_pallas():
+    from repro.core import search as S
+    cfg = _search_cfg(quant=_quant("pq", m=2, rerank_k=4), use_pallas=True,
+                      kernel_tile_b=4)
+    return jax.make_jaxpr(
+        lambda x, g, q, qx: S.search_tiled(x, g, q, jnp.int32(0), cfg,
+                                           tile_b=2, qx=qx)
+    )(_x(), _graph(), _queries(), _qx_pq())
+
+
+def _trace_rnn_build_int8_pallas():
+    from repro.core import rnn_descent as rd
+    cfg = _rnn_cfg(use_pallas=True, quant=_quant("int8"))
+    return jax.make_jaxpr(lambda x, k: rd.build_jit(x, cfg, k))(_x(), _key())
+
+
 # ---------------------------------------------------------------- streaming
 def _trace_streaming_insert():
     """The jitted insert body (`updates._graft`): the seeding search it rides
@@ -235,10 +298,15 @@ _REGISTRY = {
     "core/nn_descent.build@mesh": _trace_nn_build_sharded,
     "core/nsg_style.build": _trace_nsg_build,
     "core/nsg_style.build@mesh": _trace_nsg_build_sharded,
+    "core/rnn_descent.build_jit@int8-pallas": _trace_rnn_build_int8_pallas,
     "core/search.search": _trace_search,
     "core/search.search@pallas": _trace_search_pallas,
+    "core/search.search@int8": _trace_search_int8,
+    "core/search.search@int8-pallas": _trace_search_int8_pallas,
+    "core/search.search@pq": _trace_search_pq,
     "core/search.search_tiled": _trace_search_tiled,
     "core/search.search_tiled@mesh": _trace_search_tiled_sharded,
+    "core/search.search_tiled@pq-pallas": _trace_search_tiled_pq_pallas,
     "streaming/updates.insert": _trace_streaming_insert,
     "streaming/updates.delete": _trace_streaming_delete,
 }

@@ -1,5 +1,6 @@
 from repro.checkpoint.checkpoint import (
-    committed_steps, latest_step, restore, save,
+    committed_steps, latest_step, manifest_names, restore, save,
 )
 
-__all__ = ["committed_steps", "latest_step", "restore", "save"]
+__all__ = ["committed_steps", "latest_step", "manifest_names", "restore",
+           "save"]

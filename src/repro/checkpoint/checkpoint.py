@@ -93,6 +93,16 @@ def latest_step(ckpt_dir: str) -> int | None:
     return steps[-1] if steps else None
 
 
+def manifest_names(ckpt_dir: str, step: int) -> list[str]:
+    """Leaf paths recorded in a committed step's manifest (keystr form, e.g.
+    ``".qx.codes"``) — lets a restorer discover the saved pytree's optional
+    subtrees (quantized-store fields, legacy formats) before it has to
+    commit to a ``like_tree`` structure."""
+    path = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return list(json.load(f)["names"])
+
+
 def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
     """Load a committed step into the structure of ``like_tree``.
 

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import distances as D
 from repro.core import graph as G
+from repro.quant import Quantization, prep_corpus
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,12 +35,18 @@ class NNDescentConfig:
     chunk: int = 256
     merge: str = "bucketed"        # "bucketed" (scatter) | "sort" (oracle)
     n_buckets: int | None = None
+    quant: Quantization = Quantization()  # int8/pq: build over the decoded
+                                          # corpus (quant.prep_corpus)
 
     def __post_init__(self):
         if self.merge not in G.MERGE_MODES:
             raise ValueError(
                 f"unknown merge mode {self.merge!r}: expected one of "
                 f"{G.MERGE_MODES}")
+        if not isinstance(self.quant, Quantization):
+            raise ValueError(
+                f"quant must be a repro.quant.Quantization, got "
+                f"{type(self.quant).__name__}")
 
 
 def random_init(key: jax.Array, x: jnp.ndarray, cfg: NNDescentConfig) -> G.Graph:
@@ -112,7 +119,11 @@ def join_and_update(x: jnp.ndarray, g: G.Graph, cfg: NNDescentConfig) -> G.Graph
 def build(x: jnp.ndarray, cfg: NNDescentConfig, key: jax.Array,
           mesh=None) -> G.Graph:
     """``mesh``: route through the multi-device sharded build (core/shard.py
-    — rows partitioned via shard_map, bitwise-identical to ``mesh=None``)."""
+    — rows partitioned via shard_map, bitwise-identical to ``mesh=None``).
+
+    ``cfg.quant`` int8/pq decodes the encoded corpus at entry and descends
+    over ``x_hat`` — the geometry the coded search will traverse."""
+    x, _ = prep_corpus(x, cfg.quant)
     if mesh is not None:
         from repro.core import shard
         return shard.build_nn_descent(x, cfg, key, mesh)
@@ -124,6 +135,7 @@ def build(x: jnp.ndarray, cfg: NNDescentConfig, key: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def build_jit(x: jnp.ndarray, cfg: NNDescentConfig, key: jax.Array) -> G.Graph:
+    x, _ = prep_corpus(x, cfg.quant)
     g0 = random_init(key, x, cfg)
 
     def step(g, _):

@@ -21,6 +21,7 @@ from repro.core import distances as D
 from repro.core import graph as G
 from repro.core import nn_descent as nnd
 from repro.core.rng import rng_prune_rows
+from repro.quant import Quantization, prep_corpus
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,12 +35,23 @@ class NSGStyleConfig:
     chunk: int = 256
     merge: str = "bucketed"        # "bucketed" (scatter) | "sort" (oracle)
     n_buckets: int | None = None
+    quant: Quantization = Quantization()  # int8/pq: whole pipeline runs over
+                                          # the decoded corpus (one encode)
 
     def __post_init__(self):
         if self.merge not in G.MERGE_MODES:
             raise ValueError(
                 f"unknown merge mode {self.merge!r}: expected one of "
                 f"{G.MERGE_MODES}")
+        if not isinstance(self.quant, Quantization):
+            raise ValueError(
+                f"quant must be a repro.quant.Quantization, got "
+                f"{type(self.quant).__name__}")
+        if self.quant.is_coded and self.knn.quant.is_coded:
+            raise ValueError(
+                "set quant on NSGStyleConfig only (it preps the corpus once "
+                "for the whole pipeline); knn.quant would re-encode the "
+                "already-decoded x_hat")
 
 
 def reachable_mask(g: G.Graph, entry: int | jnp.ndarray, iters: int) -> jnp.ndarray:
@@ -164,7 +176,11 @@ def rng_cap_rows(
 def build(x: jnp.ndarray, cfg: NSGStyleConfig, key: jax.Array,
           entry: int | jnp.ndarray | None = None, mesh=None) -> G.Graph:
     """``mesh``: route through the multi-device sharded build (core/shard.py
-    — rows partitioned via shard_map, bitwise-identical to ``mesh=None``)."""
+    — rows partitioned via shard_map, bitwise-identical to ``mesh=None``).
+
+    ``cfg.quant`` int8/pq decodes the encoded corpus once at entry; the knn
+    stage, expansion, prune and repair all run over ``x_hat``."""
+    x, _ = prep_corpus(x, cfg.quant)
     if mesh is not None:
         from repro.core import shard
         return shard.build_nsg_style(x, cfg, key, mesh, entry=entry)

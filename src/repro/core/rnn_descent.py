@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from repro.core import distances as D
 from repro.core import graph as G
 from repro.core.rng import rng_scan
+from repro.quant import Quantization, QuantizedCorpus, prep_corpus
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +49,7 @@ class RNNDescentConfig:
                                # hot-loop default) | "sort" (lexsort oracle)
     n_buckets: int | None = None   # bucket width override (power of two;
                                    # default graph.default_buckets(cap))
+    quant: Quantization = Quantization()  # corpus representation at build time
 
     def __post_init__(self):
         # config-time validation (ValueError, matching SearchConfig): a bad
@@ -60,6 +62,21 @@ class RNNDescentConfig:
             raise ValueError(
                 f"unknown merge mode {self.merge!r}: expected one of "
                 f"{G.MERGE_MODES}")
+        if not isinstance(self.quant, Quantization):
+            raise ValueError(
+                f"quant must be a repro.quant.Quantization, got "
+                f"{type(self.quant).__name__}")
+        if self.quant.is_coded and self.gram_dtype == "bf16":
+            raise ValueError(
+                f"quant.mode={self.quant.mode!r} conflicts with "
+                "gram_dtype=\"bf16\": pick one compression (use "
+                "quant.mode=\"bf16\" for half-width gathers)")
+
+    @property
+    def effective_gram_dtype(self) -> str:
+        """``quant.mode="bf16"`` routes through the pre-existing bf16-gather
+        path (SearchConfig convention)."""
+        return "bf16" if self.quant.mode == "bf16" else self.gram_dtype
 
 
 def random_init(key: jax.Array, x: jnp.ndarray, cfg: RNNDescentConfig) -> G.Graph:
@@ -67,17 +84,33 @@ def random_init(key: jax.Array, x: jnp.ndarray, cfg: RNNDescentConfig) -> G.Grap
     return G.random_init_graph(key, x, cfg.s, cfg.capacity, cfg.metric)
 
 
-def _fused_prune_chunk(x, cid, cdist, cflag, metric, use_pallas, gram_dtype="f32"):
-    """One vertex tile of the fused NN-Descent-join + RNG-prune (Alg. 4)."""
-    if use_pallas:
+def _fused_prune_chunk(x, cid, cdist, cflag, metric, use_pallas,
+                       gram_dtype="f32", qx=None):
+    """One vertex tile of the fused NN-Descent-join + RNG-prune (Alg. 4).
+
+    ``qx`` (int8 :class:`QuantizedCorpus`) switches both paths to gathering
+    *code* rows (4x less gather traffic) with in-register dequantize. The
+    jnp fallback decodes after the gather — the same op sequence as the
+    kernel body — so use_pallas=True/False stay bitwise-equal; decoding a
+    materialized ``x_hat`` up front would differ in the last ulp (XLA fuses
+    the decode multiply-add differently per fusion context)."""
+    if qx is not None:
+        if use_pallas:
+            from repro.kernels.rng_prune import ops as rng_ops
+            return rng_ops.rng_prune_int8(
+                qx.codes, qx.scale, qx.zero, cid, cdist, flags=cflag)
+        from repro.quant import int8_decode
+        vecs = int8_decode(qx.codes[jnp.maximum(cid, 0)], qx.scale, qx.zero)
+    elif use_pallas:
         from repro.kernels.rng_prune import ops as rng_ops
         keep, red_w, red_d = rng_ops.rng_prune(
             x, cid, cdist, flags=cflag, gram_dtype=gram_dtype
         )
         return keep, red_w, red_d
-    if gram_dtype == "bf16":
-        x = x.astype(jnp.bfloat16)
-    vecs = x[jnp.maximum(cid, 0)]
+    else:
+        if gram_dtype == "bf16":
+            x = x.astype(jnp.bfloat16)
+        vecs = x[jnp.maximum(cid, 0)]
     pair = D.batched_gram(vecs, metric)
     old = cflag == G.OLD
     skip = old[:, :, None] & old[:, None, :]     # old-old pairs already verified
@@ -87,11 +120,14 @@ def _fused_prune_chunk(x, cid, cdist, cflag, metric, use_pallas, gram_dtype="f32
 
 def prune_rows(
     x: jnp.ndarray, ids: jnp.ndarray, dists: jnp.ndarray, flags: jnp.ndarray,
-    cfg: RNNDescentConfig,
+    cfg: RNNDescentConfig, qx: QuantizedCorpus | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Chunked fused prune over a block of adjacency rows (the whole graph or
     one shard's rows — the computation is per-row, so any row partition gives
-    bitwise-identical per-row results). Returns (keep, red_w, red_d)."""
+    bitwise-identical per-row results). Returns (keep, red_w, red_d).
+
+    ``qx``: int8 codes for the code-gathering prune (see
+    :func:`_fused_prune_chunk`); ``None`` keeps the f32/bf16 path."""
     n_rows, m = ids.shape
     chunk = min(cfg.chunk, n_rows)
     pad = (-n_rows) % chunk
@@ -102,7 +138,8 @@ def prune_rows(
     def one_chunk(args):
         cid, cdist, cflag = args
         return _fused_prune_chunk(x, cid, cdist, cflag, cfg.metric,
-                                  cfg.use_pallas, cfg.gram_dtype)
+                                  cfg.use_pallas, cfg.effective_gram_dtype,
+                                  qx=qx)
 
     keep, red_w, red_d = jax.lax.map(
         one_chunk,
@@ -116,7 +153,8 @@ def prune_rows(
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def update_neighbors(x: jnp.ndarray, g: G.Graph, cfg: RNNDescentConfig) -> G.Graph:
+def update_neighbors(x: jnp.ndarray, g: G.Graph, cfg: RNNDescentConfig,
+                     qx: QuantizedCorpus | None = None) -> G.Graph:
     """Paper Algorithm 4, one parallel sweep over all vertices.
 
     For each vertex u (rows sorted by distance):
@@ -126,7 +164,8 @@ def update_neighbors(x: jnp.ndarray, g: G.Graph, cfg: RNNDescentConfig) -> G.Gra
         simultaneous "NN-Descent join" that keeps v reachable from u via w;
       * kept entries become "old"; replacement edges are inserted "new".
     """
-    keep, red_w, red_d = prune_rows(x, g.neighbors, g.dists, g.flags, cfg)
+    keep, red_w, red_d = prune_rows(x, g.neighbors, g.dists, g.flags, cfg,
+                                    qx=qx)
 
     # Surviving adjacency: kept entries, flags forced to "old" (Alg. 4 L16).
     pruned = G.Graph(
@@ -160,14 +199,19 @@ def build(x: jnp.ndarray, cfg: RNNDescentConfig, key: jax.Array,
     multi-device sharded path (core/shard.py): graph rows partitioned across
     the mesh's "rows" logical axis via shard_map, x replicated, bucket tables
     exchanged between shards. Bitwise-identical to ``mesh=None`` (asserted in
-    tests/test_sharded_parity.py)."""
+    tests/test_sharded_parity.py).
+
+    ``cfg.quant`` int8/pq builds the graph over the *decoded* corpus (see
+    :func:`prep_corpus`) — the geometry the coded search will traverse; the
+    int8 prune additionally gathers code rows instead of f32 rows."""
+    xb, qx = prep_corpus(x, cfg.quant)
     if mesh is not None:
         from repro.core import shard
-        return shard.build_rnn_descent(x, cfg, key, mesh)
-    g = random_init(key, x, cfg)
+        return shard.build_rnn_descent(xb, cfg, key, mesh, qx=qx)
+    g = random_init(key, xb, cfg)
     for t1 in range(cfg.t1):
         for _ in range(cfg.t2):
-            g = update_neighbors(x, g, cfg)
+            g = update_neighbors(xb, g, cfg, qx=qx)
         if t1 != cfg.t1 - 1:
             g = add_reverse_edges(g, cfg)
     return g
@@ -178,11 +222,18 @@ def build_jit(x: jnp.ndarray, cfg: RNNDescentConfig, key: jax.Array) -> G.Graph:
     """Paper Algorithm 6 as nested ``lax.scan`` — single XLA program.
 
     This is the lowering used for the dry-run / TPU path: the whole build is
-    one compiled module regardless of (T1, T2)."""
+    one compiled module regardless of (T1, T2).
+
+    Coded-build parity note: use_pallas=True/False and mesh/no-mesh are
+    bitwise-equal *within* each entry point, but :func:`build` and
+    :func:`build_jit` under int8/pq can differ in the last ulp of ``dists``
+    (same ids/flags): XLA contracts the decode multiply-add into FMA
+    differently in the per-sweep jit vs this whole-program scan."""
+    x, qx = prep_corpus(x, cfg.quant)
     g0 = random_init(key, x, cfg)
 
     def inner(g, _):
-        return update_neighbors(x, g, cfg), None
+        return update_neighbors(x, g, cfg, qx=qx), None
 
     def outer(carry, t1):
         g = carry

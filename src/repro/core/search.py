@@ -86,7 +86,22 @@ import jax.numpy as jnp
 
 from repro.core import distances as D
 from repro.core import graph as G
-from repro.kernels.beam_score import beam_score, beam_score_ref, score_block
+from repro.kernels.beam_score import (
+    beam_score,
+    beam_score_int8,
+    beam_score_int8_ref,
+    beam_score_pq,
+    beam_score_pq_ref,
+    beam_score_ref,
+    score_block,
+)
+from repro.quant import (
+    Quantization,
+    QuantizedCorpus,
+    int8_score_block,
+    pq_lut,
+    pq_score_codes,
+)
 
 METRICS = ("l2", "ip", "cos")
 GRAM_DTYPES = ("f32", "bf16")
@@ -105,6 +120,7 @@ class SearchConfig:
     use_pallas: bool = False  # fused Pallas gather+score kernel for the beam inner loop
     gram_dtype: str = "f32"  # neighbor-gather dtype: "f32" | "bf16" (rng_prune convention)
     kernel_tile_b: int = 64  # fused-kernel lane tile (VMEM ~ tile * k * d * 4 B)
+    quant: Quantization = Quantization()  # corpus representation: f32/bf16/int8/pq
 
     def __post_init__(self):
         # config-time validation: a bad metric/gram_dtype used to surface only
@@ -140,6 +156,29 @@ class SearchConfig:
                 self.slots < 8 or (self.slots & (self.slots - 1)) != 0):
             raise ValueError(
                 f"slots must be a power of two >= 8, got {self.slots}")
+        if not isinstance(self.quant, Quantization):
+            raise ValueError(
+                f"quant must be a repro.quant.Quantization, got "
+                f"{type(self.quant).__name__}")
+        if self.quant.is_coded:
+            if self.gram_dtype == "bf16":
+                raise ValueError(
+                    f"quant.mode={self.quant.mode!r} conflicts with "
+                    "gram_dtype=\"bf16\": the coded paths gather codes, not "
+                    "vectors — pick one compression (use quant.mode=\"bf16\" "
+                    "for half-width gathers)")
+            if 0 < self.quant.rerank_k < self.topk:
+                raise ValueError(
+                    f"quant.rerank_k={self.quant.rerank_k} is smaller than "
+                    f"topk={self.topk}: the exact-f32 rerank tail must cover "
+                    "at least the returned results (or be 0 to disable)")
+
+    @property
+    def effective_gram_dtype(self) -> str:
+        """The gather dtype the beam step actually uses: ``quant.mode=
+        "bf16"`` routes through the pre-existing bf16-gather path, so one
+        ``quant=`` field selects every corpus representation."""
+        return "bf16" if self.quant.mode == "bf16" else self.gram_dtype
 
 
 def _next_pow2(v: int) -> int:
@@ -232,6 +271,7 @@ def _search_impl(
     eps: jnp.ndarray,            # (B, E) validated
     cfg: SearchConfig,
     valid: jnp.ndarray | None = None,   # (n,) bool — see tombstone note below
+    qx: QuantizedCorpus | None = None,  # codes when cfg.quant is int8/pq
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     n = x.shape[0]
     b = queries.shape[0]
@@ -240,6 +280,16 @@ def _search_impl(
     rows = jnp.arange(b)
     dense = cfg.visited == "dense"
     slots = resolve_slots(cfg, e)
+    qmode = cfg.quant.mode if cfg.quant.is_coded else None
+    if qmode and qx is None:
+        raise ValueError(
+            f"cfg.quant selects mode {qmode!r} but no quantized corpus was "
+            "passed (qx=) — encode with repro.quant.encode_corpus")
+    if qmode == "pq":
+        # the query-to-centroid LUT is loop-invariant across beam iterations:
+        # computed once per query batch here, closed over by the loop body
+        # (and by the seed scoring below), never recomputed
+        lut_a, lut_b, qsq = pq_lut(queries, qx.codebooks, cfg.metric)
 
     # --- seed the beam with E entries (duplicate seeds within a lane inert).
     # Seeds score through score_block too — one op sequence for every distance
@@ -247,13 +297,21 @@ def _search_impl(
     # re-enters under the identical f32 value. Seeds read the f32 corpus even
     # under gram_dtype="bf16": seed vertices are marked visited, so they are
     # never re-scored through the candidate path and the mixed precision is
-    # inert.
+    # inert. Under int8/pq the seeds score through the *quantized* corpus —
+    # every beam distance lives on one scale, so candidate/seed comparisons
+    # stay meaningful and the rerank tail restores exactness at the end.
     dup = jnp.any(
         (eps[:, :, None] == eps[:, None, :])
         & (jnp.arange(e)[None, :, None] > jnp.arange(e)[None, None, :]),
         axis=-1,
     )
-    ep_d = score_block(x[eps], queries, cfg.metric)               # (B, E)
+    if qmode == "int8":
+        ep_d = int8_score_block(qx.codes[eps], qx.scale, qx.zero,
+                                queries, cfg.metric)              # (B, E)
+    elif qmode == "pq":
+        ep_d = pq_score_codes(qx.codes[eps], lut_a, lut_b, qsq, cfg.metric)
+    else:
+        ep_d = score_block(x[eps], queries, cfg.metric)           # (B, E)
     seed_ids = jnp.where(dup, -1, eps)
     seed_d = jnp.where(dup, jnp.inf, ep_d)
 
@@ -296,15 +354,35 @@ def _search_impl(
         # fused gather+score (Eq. 4 prefix slice + distance evaluation): the
         # kernel and the jnp oracle share one scoring function, so the two
         # paths agree bitwise — use_pallas only changes where the gathered
-        # candidate block lives (VMEM vs an HBM intermediate)
-        if cfg.use_pallas:
+        # candidate block lives (VMEM vs an HBM intermediate). Under int8/pq
+        # the gather reads *codes* (4x / d/m-fold less traffic) and decode
+        # happens in-register next to the distance math.
+        if qmode == "int8":
+            if cfg.use_pallas:
+                nbrs, cand_d, _ = beam_score_int8(
+                    qx.codes, qx.scale, qx.zero, g.neighbors, u, queries,
+                    k=k, metric=cfg.metric, tile_b=cfg.kernel_tile_b)
+            else:
+                nbrs, cand_d, _ = beam_score_int8_ref(
+                    qx.codes, qx.scale, qx.zero, g.neighbors, u, queries,
+                    k=k, metric=cfg.metric)
+        elif qmode == "pq":
+            if cfg.use_pallas:
+                nbrs, cand_d, _ = beam_score_pq(
+                    qx.codes, g.neighbors, u, lut_a, lut_b, qsq,
+                    k=k, metric=cfg.metric, tile_b=cfg.kernel_tile_b)
+            else:
+                nbrs, cand_d, _ = beam_score_pq_ref(
+                    qx.codes, g.neighbors, u, lut_a, lut_b, qsq,
+                    k=k, metric=cfg.metric)
+        elif cfg.use_pallas:
             nbrs, cand_d, _ = beam_score(
                 x, g.neighbors, u, queries, k=k, metric=cfg.metric,
-                tile_b=cfg.kernel_tile_b, gram_dtype=cfg.gram_dtype)
+                tile_b=cfg.kernel_tile_b, gram_dtype=cfg.effective_gram_dtype)
         else:
             nbrs, cand_d, _ = beam_score_ref(
                 x, g.neighbors, u, queries, k=k, metric=cfg.metric,
-                gram_dtype=cfg.gram_dtype)
+                gram_dtype=cfg.effective_gram_dtype)
         # cand_ok: per-candidate validity (real neighbor slot, live lane) —
         # distinct from the function-level `valid` tombstone mask
         cand_ok = (nbrs >= 0) & active[:, None]
@@ -336,6 +414,24 @@ def _search_impl(
     beam_ids, beam_d, _, _, _, _ = jax.lax.while_loop(cond, body, state)
     # beam rows are top_k-sorted ascending and duplicate-free by construction,
     # so the topk prefix is sorted-valid for any topk <= L
+    rerank = min(cfg.quant.rerank_k, cfg.l) if qmode else 0
+    if rerank:
+        # exact-f32 rerank tail: quantized distances ordered the traversal;
+        # the final ranking re-scores the best `rerank` beam entries against
+        # the uncompressed corpus (the only place the coded path touches x)
+        # so the returned ids/dists carry exact f32 distances and quantizer
+        # rank inversions inside the window are repaired.
+        ok = beam_ids >= 0
+        if valid is not None:
+            ok &= valid[jnp.maximum(beam_ids, 0)]
+        masked_d = jnp.where(ok, beam_d, jnp.inf)
+        neg_q, order = jax.lax.top_k(-masked_d, rerank)
+        rids = jnp.take_along_axis(beam_ids, order, axis=1)       # (B, rerank)
+        exact = score_block(x[jnp.maximum(rids, 0)], queries, cfg.metric)
+        exact = jnp.where(neg_q > -jnp.inf, exact, jnp.inf)
+        neg_d, o2 = jax.lax.top_k(-exact, cfg.topk)
+        out_ids = jnp.take_along_axis(rids, o2, axis=1)
+        return jnp.where(neg_d > -jnp.inf, out_ids, -1), -neg_d
     if valid is not None:
         # tombstone-aware serving (streaming/): masked vertices traverse the
         # beam like any other (they are live bridges in the graph) but must
@@ -359,6 +455,7 @@ def search(
     entry_points: jnp.ndarray,
     cfg: SearchConfig,
     valid: jnp.ndarray | None = None,
+    qx: QuantizedCorpus | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (ids, dists) of shape (B, topk), ascending distance.
 
@@ -367,9 +464,12 @@ def search(
     capacity padding) are traversed normally but never returned; lanes
     reaching fewer than topk valid vertices pad with (-1, +inf). ``None``
     keeps the historical exact path (bitwise unchanged).
+    ``qx``: the encoded corpus (:func:`repro.quant.encode_corpus`) — required
+    when ``cfg.quant`` selects int8/pq; the beam then gathers codes and ``x``
+    is touched only by the exact rerank tail.
     """
     eps = _validate_entry_points(entry_points, queries.shape[0], cfg.l)
-    return _search_impl(x, g, queries, eps, cfg, valid=valid)
+    return _search_impl(x, g, queries, eps, cfg, valid=valid, qx=qx)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "tile_b", "mesh"))
@@ -382,6 +482,7 @@ def search_tiled(
     tile_b: int = 256,
     mesh=None,
     valid: jnp.ndarray | None = None,
+    qx: QuantizedCorpus | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Stream an arbitrary query count through B_tile-sized ``lax.map`` tiles.
 
@@ -402,6 +503,8 @@ def search_tiled(
 
     ``valid``: optional (n,) tombstone/padding mask (see :func:`search`) —
     replicated per device under a mesh, composing with every other option.
+    ``qx``: encoded corpus for ``cfg.quant`` int8/pq — replicated per device
+    like ``x`` (codes are a corpus-sized store, queries are what shard).
     """
     b = queries.shape[0]
     eps = _validate_entry_points(entry_points, b, cfg.l)
@@ -421,9 +524,10 @@ def search_tiled(
     q_tiles = q_p.reshape(-1, tile_b, queries.shape[1])
     ep_tiles = eps_p.reshape(-1, tile_b, eps.shape[1])
 
-    def tiles_body(xx, gg, vv, qt, et):
+    def tiles_body(xx, gg, vv, qq, qt, et):
         return jax.lax.map(
-            lambda t: _search_impl(xx, gg, t[0], t[1], cfg, valid=vv), (qt, et)
+            lambda t: _search_impl(xx, gg, t[0], t[1], cfg, valid=vv, qx=qq),
+            (qt, et),
         )
 
     if qaxes:
@@ -434,24 +538,37 @@ def search_tiled(
         from jax.sharding import PartitionSpec as P
         qspec = SH.pspec(mesh, "queries", None, None)
         rep = G.Graph(P(), P(), P())
-        if valid is None:
-            def no_mask(xx, gg, qt, et):
-                return tiles_body(xx, gg, None, qt, et)
-            ids, dists = shard_map(
-                no_mask, mesh=mesh,
-                in_specs=(P(), rep, qspec, qspec),
-                out_specs=(qspec, qspec),
-                check_rep=False,
-            )(x, g, q_tiles, ep_tiles)
-        else:
-            ids, dists = shard_map(
-                tiles_body, mesh=mesh,
-                in_specs=(P(), rep, P(), qspec, qspec),
-                out_specs=(qspec, qspec),
-                check_rep=False,
-            )(x, g, valid, q_tiles, ep_tiles)
+        # optional operands (valid mask, quantized store) join the operand
+        # and spec lists only when present, so the shard_map signature — and
+        # with it the absent-operand traces — stays identical to before
+        operands: list = [x, g]
+        specs: list = [P(), rep]
+        has_valid, has_qx = valid is not None, qx is not None
+        if has_valid:
+            operands.append(valid)
+            specs.append(P())
+        if has_qx:
+            operands.append(qx)
+            specs.append(jax.tree.map(lambda _: P(), qx))
+        operands += [q_tiles, ep_tiles]
+        specs += [qspec, qspec]
+
+        def dispatch(xx, gg, *rest):
+            i = 0
+            vv = rest[i] if has_valid else None
+            i += has_valid
+            qq = rest[i] if has_qx else None
+            i += has_qx
+            return tiles_body(xx, gg, vv, qq, rest[i], rest[i + 1])
+
+        ids, dists = shard_map(
+            dispatch, mesh=mesh,
+            in_specs=tuple(specs),
+            out_specs=(qspec, qspec),
+            check_rep=False,
+        )(*operands)
     else:
-        ids, dists = tiles_body(x, g, valid, q_tiles, ep_tiles)
+        ids, dists = tiles_body(x, g, valid, qx, q_tiles, ep_tiles)
     return ids.reshape(-1, cfg.topk)[:b], dists.reshape(-1, cfg.topk)[:b]
 
 

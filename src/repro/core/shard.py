@@ -179,9 +179,14 @@ def merge_candidate_edges(g: G.Graph, cand_src, cand_dst, cand_dist,
 
 # ------------------------------------------------------------- RNN-Descent
 @functools.partial(jax.jit, static_argnames=("cfg", "mesh"))
-def rnn_update_neighbors(x, g: G.Graph, cfg, mesh: Mesh) -> G.Graph:
+def rnn_update_neighbors(x, g: G.Graph, cfg, mesh: Mesh, qx=None) -> G.Graph:
     """Sharded paper Algorithm 4 sweep — rnn_descent.update_neighbors with
-    rows partitioned over the mesh (bitwise-identical result)."""
+    rows partitioned over the mesh (bitwise-identical result).
+
+    ``qx``: optional int8 :class:`repro.quant.QuantizedCorpus`, replicated
+    like ``x`` — the per-shard prune gathers code rows exactly as the
+    single-device path does, preserving bitwise mesh parity for quantized
+    builds."""
     from repro.core import rnn_descent as rd
 
     n, m = g.neighbors.shape
@@ -189,10 +194,12 @@ def rnn_update_neighbors(x, g: G.Graph, cfg, mesh: Mesh) -> G.Graph:
     n_pad = _padded(n, d)
     b = cfg.n_buckets or G.default_buckets(m)
     axes = row_axes(mesh)
+    has_qx = qx is not None
 
-    def shard_fn(xx, gl):
+    def shard_fn(xx, gl, *rest):
+        qq = rest[0] if has_qx else None
         keep, red_w, red_d = rd.prune_rows(xx, gl.neighbors, gl.dists,
-                                           gl.flags, cfg)
+                                           gl.flags, cfg, qx=qq)
         pruned = G.sort_rows(G.Graph(
             neighbors=jnp.where(keep, gl.neighbors, -1),
             dists=jnp.where(keep, gl.dists, jnp.inf),
@@ -205,10 +212,15 @@ def rnn_update_neighbors(x, g: G.Graph, cfg, mesh: Mesh) -> G.Graph:
         return _merge_candidates_shard(
             pruned, cand_src, cand_dst, cand_dist, n_pad, m, b, axes, d)
 
+    operands = [x, pad_rows(g, n_pad)]
+    specs = [P(), _graph_specs(mesh)]
+    if has_qx:
+        operands.append(qx)
+        specs.append(jax.tree.map(lambda _: P(), qx))
     gs = shard_map(shard_fn, mesh=mesh,
-                   in_specs=(P(), _graph_specs(mesh)),
+                   in_specs=tuple(specs),
                    out_specs=_graph_specs(mesh),
-                   check_rep=False)(x, pad_rows(g, n_pad))
+                   check_rep=False)(*operands)
     return G.Graph(gs.neighbors[:n], gs.dists[:n], gs.flags[:n])
 
 
@@ -267,17 +279,18 @@ def add_reverse_edges(g: G.Graph, r: int, mesh: Mesh,
     return G.Graph(gs.neighbors[:n], gs.dists[:n], gs.flags[:n])
 
 
-def build_rnn_descent(x, cfg, key, mesh: Mesh) -> G.Graph:
+def build_rnn_descent(x, cfg, key, mesh: Mesh, qx=None) -> G.Graph:
     """Sharded paper Algorithm 6 (rnn_descent.build(mesh=...) entry point).
     RandomGraph(S) is computed replicated (same key -> same init), sweeps run
-    row-sharded."""
+    row-sharded. ``x``/``qx`` arrive pre-prepped from rnn_descent.build
+    (under ``cfg.quant`` x is already the decoded corpus)."""
     from repro.core import rnn_descent as rd
 
     _check_mesh(mesh, cfg.merge)
     g = rd.random_init(key, x, cfg)
     for t1 in range(cfg.t1):
         for _ in range(cfg.t2):
-            g = rnn_update_neighbors(x, g, cfg, mesh)
+            g = rnn_update_neighbors(x, g, cfg, mesh, qx=qx)
         if t1 != cfg.t1 - 1:
             g = add_reverse_edges(g, cfg.r, mesh, cfg.n_buckets)
     return g

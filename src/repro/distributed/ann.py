@@ -31,6 +31,7 @@ from repro import checkpoint
 from repro.core import graph as G
 from repro.core import search as S
 from repro.distributed import sharding as SH
+from repro.quant import QuantizedCorpus, encode_corpus
 
 METHODS = ("rnn-descent", "nn-descent", "nsg-style")
 
@@ -80,6 +81,16 @@ def place_graph(g: G.Graph, mesh: Mesh | None) -> G.Graph:
     return G.Graph(*(jax.device_put(jnp.asarray(np.asarray(a)), s) for a in g))
 
 
+def place_replicated(tree, mesh: Mesh | None):
+    """Replicate any pytree (quantized codes, masks) onto the mesh — the
+    serving-side placement, same rationale as :func:`place_graph`."""
+    if mesh is None or tree is None:
+        return tree
+    s = NamedSharding(mesh, P())
+    return jax.tree.map(
+        lambda a: jax.device_put(jnp.asarray(np.asarray(a)), s), tree)
+
+
 @dataclasses.dataclass
 class ShardedANN:
     """A built index bound to a (possibly absent) mesh.
@@ -95,42 +106,89 @@ class ShardedANN:
     mesh: Mesh | None = None
     method: str = "rnn-descent"
     build_cfg: Any = None
+    qx: QuantizedCorpus | None = None
 
     @classmethod
     def build(cls, x, method: str = "rnn-descent", cfg=None,
               key: jax.Array | None = None, mesh: Mesh | None = None,
               ) -> "ShardedANN":
-        """Construct the index — row-sharded over ``mesh`` when given."""
+        """Construct the index — row-sharded over ``mesh`` when given. A
+        coded ``cfg.quant`` builds the graph in the quantized geometry and
+        keeps the codes for serving (search configs with the same mode hit
+        the fused decode+score path)."""
         cfg = cfg if cfg is not None else _default_cfg(method)
         key = key if key is not None else jax.random.PRNGKey(0)
         g = _build_fn(method)(x, cfg, key, mesh=mesh)
-        return cls(x=x, graph=g, mesh=mesh, method=method, build_cfg=cfg)
+        quant = getattr(cfg, "quant", None)
+        qx = None
+        if quant is not None and quant.is_coded:
+            # deterministic re-encode (same train rows, same pq seed) of the
+            # codes the builder's prep_corpus derived the geometry from
+            qx = place_replicated(
+                encode_corpus(jnp.asarray(x, jnp.float32), quant), mesh)
+        return cls(x=x, graph=g, mesh=mesh, method=method, build_cfg=cfg,
+                   qx=qx)
 
     def search(self, queries, cfg: S.SearchConfig | None = None,
                entry_points=None, tile_b: int = 256):
         """Serve through the tiled driver; query tiles shard over the mesh."""
         cfg = cfg if cfg is not None else S.SearchConfig()
+        qx = None
+        if cfg.quant.is_coded:
+            if self.qx is None:
+                raise ValueError(
+                    f"search config requests quant mode {cfg.quant.mode!r} "
+                    "but the index holds no codes — build with a coded "
+                    "cfg.quant (or set .qx from repro.quant.encode_corpus)")
+            if self.qx.mode != cfg.quant.mode:
+                raise ValueError(
+                    f"search config requests quant mode {cfg.quant.mode!r} "
+                    f"but the index codes are {self.qx.mode!r}")
+            qx = self.qx
         if entry_points is None:
             entry_points = S.default_entry_point(self.x, cfg.metric)
         return S.search_tiled(self.x, self.graph, queries, entry_points,
-                              cfg, tile_b=tile_b, mesh=self.mesh)
+                              cfg, tile_b=tile_b, mesh=self.mesh, qx=qx)
 
     # ------------------------------------------------------------ persistence
     def save(self, ckpt_dir: str, step: int = 0) -> None:
-        """Atomic-commit save of the graph (host arrays — mesh-agnostic)."""
-        checkpoint.save(ckpt_dir, step, self.graph)
+        """Atomic-commit save of the graph — plus the quantized codes when
+        present (host arrays — mesh-agnostic). Unquantized indexes keep the
+        legacy bare-graph checkpoint format."""
+        if self.qx is None:
+            checkpoint.save(ckpt_dir, step, self.graph)
+        else:
+            checkpoint.save(ckpt_dir, step,
+                            {"graph": self.graph, "qx": self.qx})
 
     @classmethod
     def restore(cls, ckpt_dir: str, x, mesh: Mesh | None = None,
                 step: int | None = None, method: str = "rnn-descent",
                 ) -> "ShardedANN":
-        """Elastic restore: load the committed graph and place it on
-        ``mesh`` (any shape — need not match the mesh it was saved from)."""
+        """Elastic restore: load the committed graph (and codes, if the
+        checkpoint holds any) and place them on ``mesh`` (any shape — need
+        not match the mesh it was saved from)."""
         if step is None:
             step = checkpoint.latest_step(ckpt_dir)
             if step is None:
                 raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
-        like = G.Graph(neighbors=0, dists=0, flags=0)  # treedef only
-        g = checkpoint.restore(ckpt_dir, step, like)
-        g = G.Graph(*(jnp.asarray(a) for a in g))
-        return cls(x=x, graph=place_graph(g, mesh), mesh=mesh, method=method)
+        # probe the manifest: quantized saves are a {"graph", "qx"} dict
+        # (leaf names like "['qx'].codes"), legacy saves a bare Graph.
+        names = set(checkpoint.manifest_names(ckpt_dir, step))
+        if any(n.startswith("['qx']") for n in names):
+            if "['qx'].codebooks" in names:
+                qx_like = QuantizedCorpus(codes=0, codebooks=0)
+            else:
+                qx_like = QuantizedCorpus(codes=0, scale=0, zero=0)
+            like = {"graph": G.Graph(neighbors=0, dists=0, flags=0),
+                    "qx": qx_like}
+            tree = jax.tree.map(jnp.asarray,
+                                checkpoint.restore(ckpt_dir, step, like))
+            g, qx = tree["graph"], tree["qx"]
+        else:
+            like = G.Graph(neighbors=0, dists=0, flags=0)  # treedef only
+            g = checkpoint.restore(ckpt_dir, step, like)
+            g = G.Graph(*(jnp.asarray(a) for a in g))
+            qx = None
+        return cls(x=x, graph=place_graph(g, mesh), mesh=mesh, method=method,
+                   qx=place_replicated(qx, mesh))

@@ -1,4 +1,21 @@
-from repro.kernels.beam_score.ops import beam_score, default_specs, kernel_spec
-from repro.kernels.beam_score.ref import beam_score_ref, score_block
+from repro.kernels.beam_score.ops import (
+    beam_score,
+    beam_score_int8,
+    beam_score_pq,
+    default_specs,
+    kernel_spec,
+    kernel_spec_int8,
+    kernel_spec_pq,
+)
+from repro.kernels.beam_score.ref import (
+    beam_score_int8_ref,
+    beam_score_pq_ref,
+    beam_score_ref,
+    score_block,
+)
 
-__all__ = ["beam_score", "beam_score_ref", "score_block", "kernel_spec", "default_specs"]
+__all__ = [
+    "beam_score", "beam_score_ref", "beam_score_int8", "beam_score_int8_ref",
+    "beam_score_pq", "beam_score_pq_ref", "score_block", "kernel_spec",
+    "kernel_spec_int8", "kernel_spec_pq", "default_specs",
+]

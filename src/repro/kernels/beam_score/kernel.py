@@ -68,6 +68,74 @@ def _beam_score_body(u_ref, q_ref, nbrs_ref, x_ref, keys_ref, ids_ref,
     ids_ref[...] = jnp.where(valid, nbrs, -1)
 
 
+def _gather_codes(u_ref, nbrs_ref, codes_ref, k: int, dtype):
+    """Shared frontier gather for the coded bodies: frontier ids (tb, 1)
+    -> (nbrs (tb, k) int32, code block (tb, k, w) ``dtype``) where w is the
+    code row width (d for int8, m for pq). Identical loop structure to the
+    f32 body's gather; only the gathered dtype differs."""
+    tb = u_ref.shape[0]
+    w = codes_ref.shape[1]
+
+    def gather_lane(lane, carry):
+        nbr_all, code_all = carry
+        uid = u_ref[lane, 0]
+        row = nbrs_ref[pl.dslice(uid, 1), :]                  # (1, M)
+        nbr = row[0, :k]                                      # Eq. 4 prefix
+
+        def gather_j(j, cacc):
+            vid = jnp.maximum(nbr[j], 0)
+            crow = codes_ref[pl.dslice(vid, 1), :]            # (1, w)
+            return jax.lax.dynamic_update_slice(
+                cacc, crow[None], (lane, j, 0))
+
+        code_all = jax.lax.fori_loop(0, k, gather_j, code_all)
+        nbr_all = jax.lax.dynamic_update_slice(nbr_all, nbr[None], (lane, 0))
+        return nbr_all, code_all
+
+    return jax.lax.fori_loop(
+        0, tb, gather_lane,
+        (jnp.full((tb, k), -1, jnp.int32), jnp.zeros((tb, k, w), dtype)),
+    )
+
+
+def _beam_score_int8_body(u_ref, q_ref, nbrs_ref, codes_ref, scale_ref,
+                          zero_ref, keys_ref, ids_ref, *, k: int, metric: str):
+    """int8 variant: gathers (tb, k, d) *code* rows (4x less VMEM traffic
+    than f32) and dequantizes in-register inside
+    :func:`repro.quant.int8_score_block` — shared with the jnp oracle, so
+    fused-vs-oracle parity is bitwise."""
+    from repro.core.graph import dist_key
+    from repro.quant import int8_score_block
+
+    nbrs, codes = _gather_codes(u_ref, nbrs_ref, codes_ref, k, jnp.int8)
+    dist = int8_score_block(codes, scale_ref[0], zero_ref[0],
+                            q_ref[...], metric)               # (tb, k)
+    valid = nbrs >= 0
+    dist = jnp.where(valid, dist, jnp.inf)
+    keys_ref[...] = dist_key(dist)
+    ids_ref[...] = jnp.where(valid, nbrs, -1)
+
+
+def _beam_score_pq_body(u_ref, luta_ref, lutb_ref, qsq_ref, nbrs_ref,
+                        codes_ref, keys_ref, ids_ref, *, k: int, metric: str):
+    """PQ variant: the query tile arrives pre-expanded into its
+    query-to-centroid LUT (``pq_lut`` — computed once per tile, outside the
+    beam loop), so scoring is a pure gather-accumulate over the (tb, k, m)
+    gathered code block. No arithmetic ever touches the codes — they are
+    table indices — hence no dequantize step and no low-precision-input
+    declaration in the spec."""
+    from repro.core.graph import dist_key
+    from repro.quant import pq_score_codes
+
+    nbrs, codes = _gather_codes(u_ref, nbrs_ref, codes_ref, k, jnp.uint8)
+    dist = pq_score_codes(codes, luta_ref[...], lutb_ref[...],
+                          qsq_ref[...][:, 0], metric)         # (tb, k)
+    valid = nbrs >= 0
+    dist = jnp.where(valid, dist, jnp.inf)
+    keys_ref[...] = dist_key(dist)
+    ids_ref[...] = jnp.where(valid, nbrs, -1)
+
+
 def block_layout(b: int, n: int, m: int, d: int, k: int, tile_b: int):
     """(inputs, outputs) block layout: ``(name, block_shape, index_map)``
     triples — the single source consumed by both ``pallas_call`` below and
@@ -80,6 +148,43 @@ def block_layout(b: int, n: int, m: int, d: int, k: int, tile_b: int):
         ("queries", (tile_b, d), lambda i: (i, 0)),
         ("neighbors", (n, m), lambda i: (0, 0)),
         ("x", (n, d), lambda i: (0, 0)),
+    )
+    outputs = (
+        ("keys", (tile_b, k), lambda i: (i, 0)),
+        ("ids", (tile_b, k), lambda i: (i, 0)),
+    )
+    return inputs, outputs
+
+
+def block_layout_int8(b: int, n: int, m: int, d: int, k: int, tile_b: int):
+    """int8 layout: as :func:`block_layout` but the corpus block is the
+    (n, d) int8 code array plus whole-block (1, d) scale / zero rows."""
+    inputs = (
+        ("u", (tile_b, 1), lambda i: (i, 0)),
+        ("queries", (tile_b, d), lambda i: (i, 0)),
+        ("neighbors", (n, m), lambda i: (0, 0)),
+        ("codes", (n, d), lambda i: (0, 0)),
+        ("scale", (1, d), lambda i: (0, 0)),
+        ("zero", (1, d), lambda i: (0, 0)),
+    )
+    outputs = (
+        ("keys", (tile_b, k), lambda i: (i, 0)),
+        ("ids", (tile_b, k), lambda i: (i, 0)),
+    )
+    return inputs, outputs
+
+
+def block_layout_pq(b: int, n: int, m: int, mq: int, k: int, tile_b: int):
+    """PQ layout: the query tile is replaced by its LUT tile
+    (tile_b, mq, 256) + the query-independent (mq, 256) centroid-norm table
+    + (tile_b, 1) query norms; the corpus block is the (n, mq) uint8 codes."""
+    inputs = (
+        ("u", (tile_b, 1), lambda i: (i, 0)),
+        ("lut_a", (tile_b, mq, 256), lambda i: (i, 0, 0)),
+        ("lut_b", (mq, 256), lambda i: (0, 0)),
+        ("qsq", (tile_b, 1), lambda i: (i, 0)),
+        ("neighbors", (n, m), lambda i: (0, 0)),
+        ("codes", (n, mq), lambda i: (0, 0)),
     )
     outputs = (
         ("keys", (tile_b, k), lambda i: (i, 0)),
@@ -120,3 +225,75 @@ def beam_score_tiles(
         ],
         interpret=interpret,
     )(u2, queries, neighbors, x)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "tile_b", "interpret"))
+def beam_score_int8_tiles(
+    u2: jnp.ndarray,        # (B, 1) int32, B % tile_b == 0
+    queries: jnp.ndarray,   # (B, d)
+    neighbors: jnp.ndarray,  # (n, M) int32, -1 padded
+    codes: jnp.ndarray,     # (n, d) int8
+    scale: jnp.ndarray,     # (1, d) f32
+    zero: jnp.ndarray,      # (1, d) f32
+    k: int, metric: str, tile_b: int, interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (keys uint32, ids int32), each (B, k)."""
+    if interpret is None:
+        from repro.kernels import default_interpret
+        interpret = default_interpret()
+    b = u2.shape[0]
+    n, m = neighbors.shape
+    d = codes.shape[1]
+    if b % tile_b != 0:
+        raise ValueError(
+            f"batch {b} is not a multiple of tile_b={tile_b} "
+            "(ops.beam_score_int8 pads before dispatching here)")
+    grid = (b // tile_b,)
+    ins, outs = block_layout_int8(b, n, m, d, k, tile_b)
+    return pl.pallas_call(
+        functools.partial(_beam_score_int8_body, k=k, metric=metric),
+        grid=grid,
+        in_specs=[pl.BlockSpec(bs, im) for _, bs, im in ins],
+        out_specs=[pl.BlockSpec(bs, im) for _, bs, im in outs],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.uint32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(u2, queries, neighbors, codes, scale, zero)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "tile_b", "interpret"))
+def beam_score_pq_tiles(
+    u2: jnp.ndarray,        # (B, 1) int32, B % tile_b == 0
+    lut_a: jnp.ndarray,     # (B, mq, 256) f32
+    lut_b: jnp.ndarray,     # (mq, 256) f32
+    qsq: jnp.ndarray,       # (B, 1) f32
+    neighbors: jnp.ndarray,  # (n, M) int32, -1 padded
+    codes: jnp.ndarray,     # (n, mq) uint8
+    k: int, metric: str, tile_b: int, interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (keys uint32, ids int32), each (B, k)."""
+    if interpret is None:
+        from repro.kernels import default_interpret
+        interpret = default_interpret()
+    b = u2.shape[0]
+    n, m = neighbors.shape
+    mq = codes.shape[1]
+    if b % tile_b != 0:
+        raise ValueError(
+            f"batch {b} is not a multiple of tile_b={tile_b} "
+            "(ops.beam_score_pq pads before dispatching here)")
+    grid = (b // tile_b,)
+    ins, outs = block_layout_pq(b, n, m, mq, k, tile_b)
+    return pl.pallas_call(
+        functools.partial(_beam_score_pq_body, k=k, metric=metric),
+        grid=grid,
+        in_specs=[pl.BlockSpec(bs, im) for _, bs, im in ins],
+        out_specs=[pl.BlockSpec(bs, im) for _, bs, im in outs],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.uint32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(u2, lut_a, lut_b, qsq, neighbors, codes)

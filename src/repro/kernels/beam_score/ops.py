@@ -7,8 +7,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import default_interpret
-from repro.kernels.beam_score.kernel import beam_score_tiles, block_layout
-from repro.kernels.beam_score.ref import beam_score_ref
+from repro.kernels.beam_score.kernel import (
+    beam_score_int8_tiles,
+    beam_score_pq_tiles,
+    beam_score_tiles,
+    block_layout,
+    block_layout_int8,
+    block_layout_pq,
+)
+from repro.kernels.beam_score.ref import (
+    beam_score_int8_ref,
+    beam_score_pq_ref,
+    beam_score_ref,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "metric", "tile_b",
@@ -56,6 +67,78 @@ def beam_score(
     return ids, G.key_dist(keys), keys
 
 
+@functools.partial(jax.jit, static_argnames=("k", "metric", "tile_b",
+                                             "interpret"))
+def beam_score_int8(
+    codes: jnp.ndarray,
+    scale: jnp.ndarray,
+    zero: jnp.ndarray,
+    neighbors: jnp.ndarray,
+    u: jnp.ndarray,
+    queries: jnp.ndarray,
+    k: int,
+    metric: str = "l2",
+    tile_b: int = 64,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused beam expansion over an int8 corpus: gathers (tile_b, k, d)
+    *code* rows (4x less traffic than f32) and dequantizes in-register
+    inside the shared ``repro.quant.int8_score_block``. Same contract and
+    return shape as :func:`beam_score`; bitwise-equal to
+    :func:`beam_score_int8_ref`."""
+    if interpret is None:
+        interpret = default_interpret()
+    b = u.shape[0]
+    k = min(k, neighbors.shape[1])
+    tile_b = max(1, min(tile_b, b))
+    pad = (-b) % tile_b
+    u_p = jnp.pad(u.astype(jnp.int32), (0, pad))[:, None]
+    q_p = jnp.pad(queries, ((0, pad), (0, 0)))
+    keys, ids = beam_score_int8_tiles(
+        u_p, q_p, neighbors, codes, scale[None, :], zero[None, :],
+        k=k, metric=metric, tile_b=tile_b, interpret=interpret)
+    keys, ids = keys[:b], ids[:b]
+    from repro.core import graph as G  # deferred: core imports this package
+    return ids, G.key_dist(keys), keys
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "tile_b",
+                                             "interpret"))
+def beam_score_pq(
+    codes: jnp.ndarray,
+    neighbors: jnp.ndarray,
+    u: jnp.ndarray,
+    lut_a: jnp.ndarray,
+    lut_b: jnp.ndarray,
+    qsq: jnp.ndarray,
+    k: int,
+    metric: str = "l2",
+    tile_b: int = 64,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused beam expansion over a PQ corpus: the caller computes the
+    query-to-centroid LUT once per query batch (``repro.quant.pq_lut`` —
+    it is loop-invariant across beam iterations) and the kernel scores the
+    gathered (tile_b, k, m) uint8 code block by pure gather-accumulate
+    (``repro.quant.pq_score_codes``, shared with
+    :func:`beam_score_pq_ref`). Same contract as :func:`beam_score`."""
+    if interpret is None:
+        interpret = default_interpret()
+    b = u.shape[0]
+    k = min(k, neighbors.shape[1])
+    tile_b = max(1, min(tile_b, b))
+    pad = (-b) % tile_b
+    u_p = jnp.pad(u.astype(jnp.int32), (0, pad))[:, None]
+    lut_a_p = jnp.pad(lut_a, ((0, pad), (0, 0), (0, 0)))
+    qsq_p = jnp.pad(qsq, (0, pad))[:, None]
+    keys, ids = beam_score_pq_tiles(
+        u_p, lut_a_p, lut_b, qsq_p, neighbors, codes,
+        k=k, metric=metric, tile_b=tile_b, interpret=interpret)
+    keys, ids = keys[:b], ids[:b]
+    from repro.core import graph as G  # deferred: core imports this package
+    return ids, G.key_dist(keys), keys
+
+
 def kernel_spec(*, b: int = 128, n: int = 1024, m: int = 32, d: int = 64,
                 k: int = 16, tile_b: int = 64, metric: str = "l2",
                 gram_dtype: str = "f32"):
@@ -95,9 +178,92 @@ def kernel_spec(*, b: int = 128, n: int = 1024, m: int = 32, d: int = 64,
     )
 
 
+def kernel_spec_int8(*, b: int = 256, n: int = 2048, m: int = 64,
+                     d: int = 128, k: int = 32, tile_b: int = 64,
+                     metric: str = "l2"):
+    """Spec for the int8 decode+score variant. ``codes`` is declared a
+    low-precision input: the checker proves the body upcasts to the f32
+    accumulator (the in-register dequantize) before any arithmetic."""
+    from repro.kernels.spec import BlockMeta, KernelSpec
+
+    ins, outs = block_layout_int8(b, n, m, d, k, tile_b)
+    shapes = {
+        "u": ((b, 1), jnp.int32),
+        "queries": ((b, d), jnp.float32),
+        "neighbors": ((n, m), jnp.int32),
+        "codes": ((n, d), jnp.int8),
+        "scale": ((1, d), jnp.float32),
+        "zero": ((1, d), jnp.float32),
+        "keys": ((b, k), jnp.uint32),
+        "ids": ((b, k), jnp.int32),
+    }
+    meta = lambda trips: tuple(
+        BlockMeta(nm, shapes[nm][0], bs, shapes[nm][1], im)
+        for nm, bs, im in trips)
+
+    def trace():
+        args = [jax.ShapeDtypeStruct(*shapes[nm]) for nm, _, _ in ins]
+        return jax.make_jaxpr(functools.partial(
+            beam_score_int8_tiles, k=k, metric=metric, tile_b=tile_b,
+            interpret=True,  # repo-lint: allow-interpret (abstract trace only)
+        ))(*args)
+
+    return KernelSpec(
+        name=f"beam_score_int8[{metric}]",
+        grid=(b // tile_b,),
+        inputs=meta(ins),
+        outputs=meta(outs),
+        trace=trace,
+        low_precision_inputs=("codes",),
+    )
+
+
+def kernel_spec_pq(*, b: int = 256, n: int = 2048, m: int = 64,
+                   mq: int = 32, k: int = 32, tile_b: int = 64,
+                   metric: str = "l2"):
+    """Spec for the PQ LUT-gather variant. ``codes`` are table *indices*
+    (uint8 -> int32 for the gather, never to a float): no arithmetic ever
+    touches them, so no low-precision input is declared and the checker's
+    dot rules see only the f32 LUT reductions."""
+    from repro.kernels.spec import BlockMeta, KernelSpec
+
+    ins, outs = block_layout_pq(b, n, m, mq, k, tile_b)
+    shapes = {
+        "u": ((b, 1), jnp.int32),
+        "lut_a": ((b, mq, 256), jnp.float32),
+        "lut_b": ((mq, 256), jnp.float32),
+        "qsq": ((b, 1), jnp.float32),
+        "neighbors": ((n, m), jnp.int32),
+        "codes": ((n, mq), jnp.uint8),
+        "keys": ((b, k), jnp.uint32),
+        "ids": ((b, k), jnp.int32),
+    }
+    meta = lambda trips: tuple(
+        BlockMeta(nm, shapes[nm][0], bs, shapes[nm][1], im)
+        for nm, bs, im in trips)
+
+    def trace():
+        args = [jax.ShapeDtypeStruct(*shapes[nm]) for nm, _, _ in ins]
+        return jax.make_jaxpr(functools.partial(
+            beam_score_pq_tiles, k=k, metric=metric, tile_b=tile_b,
+            interpret=True,  # repo-lint: allow-interpret (abstract trace only)
+        ))(*args)
+
+    return KernelSpec(
+        name=f"beam_score_pq[{metric}]",
+        grid=(b // tile_b,),
+        inputs=meta(ins),
+        outputs=meta(outs),
+        trace=trace,
+        low_precision_inputs=(),
+    )
+
+
 def default_specs():
     """Representative spec instances checked in CI: the docstring's VMEM
-    budget point (tile_b=64, K=32, d=128) in both gram dtypes and metrics."""
+    budget point (tile_b=64, K=32, d=128) in both gram dtypes and metrics,
+    plus the int8 and PQ decode variants at the same point (PQ at the
+    d=128 -> m=32 compression the acceptance table records)."""
     return [
         kernel_spec(b=256, n=2048, m=64, d=128, k=32, tile_b=64,
                     metric="l2", gram_dtype="f32"),
@@ -105,7 +271,19 @@ def default_specs():
                     metric="cos", gram_dtype="bf16"),
         kernel_spec(b=64, n=512, m=16, d=32, k=8, tile_b=64, metric="ip",
                     gram_dtype="f32"),
+        kernel_spec_int8(b=256, n=2048, m=64, d=128, k=32, tile_b=64,
+                         metric="l2"),
+        kernel_spec_int8(b=64, n=512, m=16, d=32, k=8, tile_b=64,
+                         metric="ip"),
+        kernel_spec_pq(b=256, n=2048, m=64, mq=32, k=32, tile_b=64,
+                       metric="l2"),
+        kernel_spec_pq(b=256, n=2048, m=64, mq=32, k=32, tile_b=64,
+                       metric="cos"),
     ]
 
 
-__all__ = ["beam_score", "beam_score_ref", "kernel_spec", "default_specs"]
+__all__ = [
+    "beam_score", "beam_score_ref", "beam_score_int8", "beam_score_int8_ref",
+    "beam_score_pq", "beam_score_pq_ref", "kernel_spec", "kernel_spec_int8",
+    "kernel_spec_pq", "default_specs",
+]

@@ -75,3 +75,53 @@ def beam_score_ref(
     d = jnp.where(valid, d, jnp.inf)
     ids = jnp.where(valid, nbrs, -1)
     return ids, d, G.dist_key(d)
+
+
+def beam_score_int8_ref(
+    codes: jnp.ndarray,
+    scale: jnp.ndarray,
+    zero: jnp.ndarray,
+    neighbors: jnp.ndarray,
+    u: jnp.ndarray,
+    queries: jnp.ndarray,
+    k: int,
+    metric: str = "l2",
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """int8 oracle: gather *code* rows (a quarter of the f32 gather bytes)
+    and score through :func:`repro.quant.int8_score_block` — the same
+    function the fused kernel body calls, so parity is bitwise."""
+    from repro.core import graph as G
+    from repro.quant import int8_score_block
+
+    nbrs = neighbors[u][:, :k]
+    blk = codes[jnp.maximum(nbrs, 0)]                # (B, k, d) int8
+    d = int8_score_block(blk, scale, zero, queries, metric)
+    valid = nbrs >= 0
+    d = jnp.where(valid, d, jnp.inf)
+    ids = jnp.where(valid, nbrs, -1)
+    return ids, d, G.dist_key(d)
+
+
+def beam_score_pq_ref(
+    codes: jnp.ndarray,
+    neighbors: jnp.ndarray,
+    u: jnp.ndarray,
+    lut_a: jnp.ndarray,
+    lut_b: jnp.ndarray,
+    qsq: jnp.ndarray,
+    k: int,
+    metric: str = "l2",
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """PQ oracle: gather (B, k, m) uint8 code rows and score them against
+    the per-query LUT from :func:`repro.quant.pq_lut` via
+    :func:`repro.quant.pq_score_codes` — shared with the kernel body."""
+    from repro.core import graph as G
+    from repro.quant import pq_score_codes
+
+    nbrs = neighbors[u][:, :k]
+    blk = codes[jnp.maximum(nbrs, 0)]                # (B, k, m) uint8
+    d = pq_score_codes(blk, lut_a, lut_b, qsq, metric)
+    valid = nbrs >= 0
+    d = jnp.where(valid, d, jnp.inf)
+    ids = jnp.where(valid, nbrs, -1)
+    return ids, d, G.dist_key(d)

@@ -1,4 +1,12 @@
-from repro.kernels.rng_prune.ops import rng_prune, default_specs, kernel_spec
-from repro.kernels.rng_prune.ref import rng_prune_ref
+from repro.kernels.rng_prune.ops import (
+    default_specs,
+    kernel_spec,
+    kernel_spec_int8,
+    rng_prune,
+    rng_prune_int8,
+)
+from repro.kernels.rng_prune.ref import rng_prune_int8_ref, rng_prune_ref
 
-__all__ = ["rng_prune", "rng_prune_ref", "kernel_spec", "default_specs"]
+__all__ = ["rng_prune", "rng_prune_ref", "rng_prune_int8",
+           "rng_prune_int8_ref", "kernel_spec", "kernel_spec_int8",
+           "default_specs"]

@@ -22,12 +22,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _rng_prune_body(ids_ref, dists_ref, flags_ref, vecs_ref, keep_ref, redw_ref, redd_ref):
-    ids = ids_ref[...]                                  # (tc, M) int32
-    dists = dists_ref[...]                              # (tc, M) f32
-    flags = flags_ref[...]                              # (tc, M) uint8 (1=new)
-    vecs = vecs_ref[...].astype(jnp.float32)            # (tc, M, d)
-
+def _prune_scan(ids, dists, flags, vecs):
+    """Shared Gram + keep/redirect scan over an f32 (tc, M, d) candidate
+    block — the body tail for both the f32/bf16 and the int8-decode
+    variants (int8 only changes how ``vecs`` got into registers)."""
     tc, m = ids.shape
     sq = jnp.sum(vecs * vecs, axis=-1)                  # (tc, M)
     gram = jax.lax.dot_general(                          # (tc, M, M) on the MXU
@@ -57,9 +55,35 @@ def _rng_prune_body(ids_ref, dists_ref, flags_ref, vecs_ref, keep_ref, redw_ref,
         jnp.full((tc, m), big, jnp.float32),
     )
     keep, red_w, red_d = jax.lax.fori_loop(0, m, body, init)
-    keep_ref[...] = keep.astype(jnp.uint8)
+    return keep.astype(jnp.uint8), red_w, jnp.where(red_d >= big, jnp.inf,
+                                                    red_d)
+
+
+def _rng_prune_body(ids_ref, dists_ref, flags_ref, vecs_ref, keep_ref,
+                    redw_ref, redd_ref):
+    vecs = vecs_ref[...].astype(jnp.float32)            # (tc, M, d)
+    keep, red_w, red_d = _prune_scan(ids_ref[...], dists_ref[...],
+                                     flags_ref[...], vecs)
+    keep_ref[...] = keep
     redw_ref[...] = red_w
-    redd_ref[...] = jnp.where(red_d >= big, jnp.inf, red_d)
+    redd_ref[...] = red_d
+
+
+def _rng_prune_int8_body(ids_ref, dists_ref, flags_ref, codes_ref, scale_ref,
+                         zero_ref, keep_ref, redw_ref, redd_ref):
+    """int8 variant: the gathered candidate block arrives as (tc, M, d)
+    int8 codes (4x less HBM->VMEM traffic) and dequantizes in-register via
+    the shared ``repro.quant.int8_decode`` before the same Gram + scan.
+    Decode is elementwise, so decode-after-gather here is bitwise-equal to
+    the oracle's gather-after-decode."""
+    from repro.quant import int8_decode
+
+    vecs = int8_decode(codes_ref[...], scale_ref[0], zero_ref[0])
+    keep, red_w, red_d = _prune_scan(ids_ref[...], dists_ref[...],
+                                     flags_ref[...], vecs)
+    keep_ref[...] = keep
+    redw_ref[...] = red_w
+    redd_ref[...] = red_d
 
 
 def block_layout(n: int, m: int, d: int, tile_c: int):
@@ -79,6 +103,59 @@ def block_layout(n: int, m: int, d: int, tile_c: int):
         ("red_d", (tile_c, m), row),
     )
     return inputs, outputs
+
+
+def block_layout_int8(n: int, m: int, d: int, tile_c: int):
+    """int8 layout: the gathered candidate block is (tile_c, M, d) int8
+    codes plus whole-block (1, d) scale / zero rows."""
+    row = lambda i: (i, 0)
+    inputs = (
+        ("ids", (tile_c, m), row),
+        ("dists", (tile_c, m), row),
+        ("flags", (tile_c, m), row),
+        ("codes", (tile_c, m, d), lambda i: (i, 0, 0)),
+        ("scale", (1, d), lambda i: (0, 0)),
+        ("zero", (1, d), lambda i: (0, 0)),
+    )
+    outputs = (
+        ("keep", (tile_c, m), row),
+        ("red_w", (tile_c, m), row),
+        ("red_d", (tile_c, m), row),
+    )
+    return inputs, outputs
+
+
+@functools.partial(jax.jit, static_argnames=("tile_c", "interpret"))
+def rng_prune_int8_tiles(
+    ids: jnp.ndarray, dists: jnp.ndarray, flags: jnp.ndarray,
+    codes: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
+    tile_c: int = 8, interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """ids/dists/flags (n, M) + gathered codes (n, M, d) int8 + scale/zero
+    (1, d) -> keep/red_w/red_d."""
+    if interpret is None:
+        from repro.kernels import default_interpret
+        interpret = default_interpret()
+    n, m = ids.shape
+    d = codes.shape[-1]
+    if n % tile_c != 0:
+        raise ValueError(
+            f"row count {n} is not a multiple of tile_c={tile_c} "
+            "(ops.rng_prune_int8 pads before dispatching here)")
+    grid = (n // tile_c,)
+    ins, outs = block_layout_int8(n, m, d, tile_c)
+    return pl.pallas_call(
+        _rng_prune_int8_body,
+        grid=grid,
+        in_specs=[pl.BlockSpec(bs, im) for _, bs, im in ins],
+        out_specs=[pl.BlockSpec(bs, im) for _, bs, im in outs],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, m), jnp.uint8),
+            jax.ShapeDtypeStruct((n, m), jnp.int32),
+            jax.ShapeDtypeStruct((n, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ids, dists, flags, codes, scale, zero)
 
 
 @functools.partial(jax.jit, static_argnames=("tile_c", "interpret"))

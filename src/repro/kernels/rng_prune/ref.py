@@ -12,3 +12,16 @@ def rng_prune_ref(ids, dists, flags, vecs):
     skip = old[:, :, None] & old[:, None, :]
     res = rng_scan(ids, dists, pair, skip_pair=skip)
     return res.keep.astype(jnp.uint8), res.redirect_w, res.redirect_d
+
+
+def rng_prune_int8_ref(codes, scale, zero, ids, dists, flags):
+    """int8 oracle: gather *code* rows, dequantize (the shared
+    ``repro.quant.int8_decode`` the kernel body calls), then the jnp Gram +
+    scan. Decode happens after the gather, exactly as in the kernel, so the
+    two execute one op sequence and parity is bitwise (a pre-decoded
+    ``x_hat`` corpus materialized in a different fusion context can differ
+    in the last ulp — tests/test_quant.py pins this oracle instead)."""
+    from repro.quant import int8_decode
+
+    vecs = int8_decode(codes[jnp.maximum(ids, 0)], scale, zero)
+    return rng_prune_ref(ids, dists, flags, vecs)

@@ -1,0 +1,48 @@
+"""Quantized corpus representations: int8 scalar quantization and product
+quantization (PQ), threaded through builder/search configs as a single
+:class:`Quantization` object (the maxtext ``AqtQuantization`` pattern) so one
+``quant=`` field selects f32 / bf16 / int8 / pq everywhere.
+
+The decode+score math lives here (:func:`int8_score_block`,
+:func:`pq_lut` + :func:`pq_score_codes`) and is shared verbatim by the
+Pallas kernel bodies and the pure-jnp oracles — that sharing is what makes
+the fused-vs-oracle parity asserted in tests/test_quant.py bitwise."""
+from repro.quant.quantization import (
+    MODES,
+    Quantization,
+    QuantizedCorpus,
+    corpus_bytes,
+    decode_pq,
+    dequantize,
+    encode_corpus,
+    encode_int8_rows,
+    encode_pq_rows,
+    encode_rows,
+    int8_decode,
+    int8_score_block,
+    pq_lut,
+    pq_score_codes,
+    prep_corpus,
+    quantize_int8,
+    train_pq,
+)
+
+__all__ = [
+    "MODES",
+    "Quantization",
+    "QuantizedCorpus",
+    "corpus_bytes",
+    "decode_pq",
+    "dequantize",
+    "encode_corpus",
+    "encode_int8_rows",
+    "encode_pq_rows",
+    "encode_rows",
+    "int8_decode",
+    "int8_score_block",
+    "pq_lut",
+    "pq_score_codes",
+    "prep_corpus",
+    "quantize_int8",
+    "train_pq",
+]

@@ -38,6 +38,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import checkpoint
 from repro.core import graph as G
+from repro.quant import QuantizedCorpus, encode_corpus
 from repro.core import rnn_descent as rd
 from repro.core import search as S
 from repro.streaming import store as ST
@@ -50,10 +51,8 @@ def _place(st: ST.Store, mesh: Mesh | None) -> ST.Store:
     if mesh is None:
         return st
     sh = NamedSharding(mesh, P())
-    put = lambda a: jax.device_put(jnp.asarray(np.asarray(a)), sh)
-    return ST.Store(x=put(st.x), graph=G.Graph(*(put(a) for a in st.graph)),
-                    occupied=put(st.occupied), tombstone=put(st.tombstone),
-                    epoch=put(st.epoch))
+    return jax.tree.map(
+        lambda a: jax.device_put(jnp.asarray(np.asarray(a)), sh), st)
 
 
 @dataclasses.dataclass
@@ -81,8 +80,14 @@ class StreamingANN:
         over ``mesh`` when given) and wrap it into a padded store."""
         cfg = cfg if cfg is not None else U.StreamingConfig()
         key = key if key is not None else jax.random.PRNGKey(0)
-        g = rd.build(jnp.asarray(x, jnp.float32), cfg.build, key, mesh=mesh)
-        st = ST.from_built(jnp.asarray(x, jnp.float32), g, capacity=capacity)
+        x = jnp.asarray(x, jnp.float32)
+        g = rd.build(x, cfg.build, key, mesh=mesh)
+        # re-encode with the builder's exact quant config (deterministic:
+        # same train rows, same pq seed) so serve-side codes match the
+        # geometry the graph was optimized for.
+        qx = (encode_corpus(x, cfg.build.quant)
+              if cfg.build.quant.is_coded else None)
+        st = ST.from_built(x, g, capacity=capacity, qx=qx)
         return cls(store=st, cfg=cfg, mesh=mesh)
 
     # -------------------------------------------------------------- queries
@@ -99,13 +104,25 @@ class StreamingANN:
         reaching fewer than topk live vertices pad with (-1, +inf)."""
         st = self.store                      # one read = a consistent epoch
         cfg = cfg if cfg is not None else S.SearchConfig()
+        qx = None
+        if cfg.quant.is_coded:
+            if st.qx is None:
+                raise ValueError(
+                    f"search config requests quant mode {cfg.quant.mode!r} "
+                    "but the store holds no codes — call "
+                    ".quantize(Quantization(...)) first")
+            if st.qx.mode != cfg.quant.mode:
+                raise ValueError(
+                    f"search config requests quant mode {cfg.quant.mode!r} "
+                    f"but the store's codes are {st.qx.mode!r}")
+            qx = st.qx
         valid = ST.active_mask(st)
         if entry_points is None:
             entry_points = S.default_entry_point(st.x, cfg.metric,
                                                  valid=valid)
         return S.search_tiled(st.x, st.graph, jnp.asarray(queries),
                               entry_points, cfg, tile_b=tile_b,
-                              mesh=self.mesh, valid=valid)
+                              mesh=self.mesh, valid=valid, qx=qx)
 
     # -------------------------------------------------------------- updates
     def insert(self, new_x) -> np.ndarray:
@@ -146,6 +163,13 @@ class StreamingANN:
         self.store = _place(st, self.mesh) if self.mesh is not None else st
         return remap
 
+    def quantize(self, quant) -> None:
+        """Attach (or retrain, or with a non-coded mode drop) quantized codes
+        for the current store — see :func:`repro.streaming.store.quantize_store`.
+        After this, searches whose config carries the same coded mode use the
+        fused decode+score path with an exact-f32 rerank tail."""
+        self.store = _place(ST.quantize_store(self.store, quant), self.mesh)
+
     # ---------------------------------------------------------- persistence
     def save(self, ckpt_dir: str, step: int | None = None) -> None:
         """Atomic-commit save of the whole store (host arrays —
@@ -164,14 +188,20 @@ class StreamingANN:
             step = checkpoint.latest_step(ckpt_dir)
             if step is None:
                 raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+        # the store's qx subtree is optional and its None fields are leafless
+        # under pytree flatten, so probe the manifest's leaf names to build a
+        # like-tree with the exact structure that was saved.
+        names = set(checkpoint.manifest_names(ckpt_dir, step))
+        if ".qx.codebooks" in names:
+            qx_like = QuantizedCorpus(codes=0, codebooks=0)
+        elif ".qx.scale" in names:
+            qx_like = QuantizedCorpus(codes=0, scale=0, zero=0)
+        else:
+            qx_like = None
         like = ST.Store(x=0, graph=G.Graph(0, 0, 0), occupied=0, tombstone=0,
-                        epoch=0)
+                        epoch=0, qx=qx_like)
         st = checkpoint.restore(ckpt_dir, step, like)
-        st = ST.Store(x=jnp.asarray(st.x), graph=G.Graph(*(jnp.asarray(a)
-                                                           for a in st.graph)),
-                      occupied=jnp.asarray(st.occupied),
-                      tombstone=jnp.asarray(st.tombstone),
-                      epoch=jnp.asarray(st.epoch))
+        st = jax.tree.map(jnp.asarray, st)
         if cfg is None:
             m = st.graph.neighbors.shape[1]
             cfg = U.StreamingConfig(

@@ -37,17 +37,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import graph as G
+from repro.quant import Quantization, QuantizedCorpus, encode_corpus
 
 
 class Store(NamedTuple):
     """x: (C, d) f32 (zeros in unoccupied rows) | graph: (C, M) adjacency |
-    occupied / tombstone: (C,) bool | epoch: () int32 update counter."""
+    occupied / tombstone: (C,) bool | epoch: () int32 update counter |
+    qx: optional quantized codes (trailing, default None, so checkpoints
+    and pytree traversals of unquantized stores are unchanged).
+
+    A quantized store keeps *both* representations resident: ``qx.codes``
+    serve the coded search (and grow / compact / checkpoint exactly like
+    ``x``), while ``x`` stays for the exact rerank tail and for the f32
+    update/repair sweeps."""
 
     x: jnp.ndarray
     graph: G.Graph
     occupied: jnp.ndarray
     tombstone: jnp.ndarray
     epoch: jnp.ndarray
+    qx: QuantizedCorpus | None = None
 
     @property
     def capacity(self) -> int:
@@ -98,15 +107,28 @@ def _pad_graph(g: G.Graph, cap: int) -> G.Graph:
     )
 
 
+def _pad_codes(qx: QuantizedCorpus | None, pad: int) -> QuantizedCorpus | None:
+    """Capacity-pad the code rows (zeros — unoccupied rows are unreachable,
+    so their decode value is inert); aux params are O(1) and untouched."""
+    if qx is None or pad == 0:
+        return qx
+    return qx._replace(codes=jnp.pad(qx.codes, ((0, pad), (0, 0))))
+
+
 def from_built(x: jnp.ndarray, g: G.Graph,
-               capacity: int | None = None) -> Store:
+               capacity: int | None = None,
+               qx: QuantizedCorpus | None = None) -> Store:
     """Wrap a batch-built (x, graph) pair into a padded store (rows [0, n)
-    occupied, nothing tombstoned, epoch 0)."""
+    occupied, nothing tombstoned, epoch 0). ``qx``: optional (n, ·) codes
+    from the same encode the builder used — padded alongside x."""
     n = x.shape[0]
     if g.n != n:
         raise ValueError(
             f"graph has {g.n} rows but the corpus has {n}: from_built "
             "expects the (x, graph) pair of one batch build")
+    if qx is not None and qx.codes.shape[0] != n:
+        raise ValueError(
+            f"qx holds {qx.codes.shape[0]} code rows but the corpus has {n}")
     cap = next_capacity(n if capacity is None else max(capacity, n))
     return Store(
         x=jnp.pad(x.astype(jnp.float32), ((0, cap - n), (0, 0))),
@@ -114,6 +136,7 @@ def from_built(x: jnp.ndarray, g: G.Graph,
         occupied=jnp.arange(cap) < n,
         tombstone=jnp.zeros((cap,), bool),
         epoch=jnp.int32(0),
+        qx=_pad_codes(qx, cap - n),
     )
 
 
@@ -132,6 +155,7 @@ def grow(store: Store, min_capacity: int) -> Store:
         occupied=jnp.pad(store.occupied, (0, pad)),
         tombstone=jnp.pad(store.tombstone, (0, pad)),
         epoch=store.epoch,
+        qx=_pad_codes(store.qx, pad),
     )
 
 
@@ -162,6 +186,12 @@ def compact(store: Store) -> tuple[Store, np.ndarray]:
         dists=jnp.asarray(d2, jnp.float32),
         flags=jnp.asarray(f2, jnp.uint8),
     ))
+    qx2 = None
+    if store.qx is not None:
+        qx2 = _pad_codes(
+            store.qx._replace(
+                codes=jnp.asarray(np.asarray(store.qx.codes)[old_ids])),
+            cap2 - n_new)
     new = Store(
         x=jnp.pad(jnp.asarray(np.asarray(store.x)[old_ids]),
                   ((0, cap2 - n_new), (0, 0))),
@@ -169,5 +199,23 @@ def compact(store: Store) -> tuple[Store, np.ndarray]:
         occupied=jnp.arange(cap2) < n_new,
         tombstone=jnp.zeros((cap2,), bool),
         epoch=store.epoch + 1,
+        qx=qx2,
     )
     return new, remap
+
+
+def quantize_store(store: Store, quant: Quantization) -> Store:
+    """Attach (or retrain) quantized codes for an existing store.
+
+    Scale / zero-point / codebooks are trained on the *live* rows only —
+    capacity padding (zero vectors) and any row distribution it would drag
+    in must not distort the code space — while codes are emitted for every
+    row (tombstones stay traversable, padding is inert). Host-level like
+    :func:`grow` (a one-shot train), bumps no epoch: the serving geometry
+    changes only when a search config starts selecting the coded path."""
+    if not quant.is_coded:
+        return store._replace(qx=None)
+    live = np.flatnonzero(np.asarray(active_mask(store)))
+    qx = encode_corpus(store.x, quant,
+                       train_rows=store.x[jnp.asarray(live)])
+    return store._replace(qx=qx)

@@ -330,8 +330,19 @@ def insert(store: Store, new_x, cfg: StreamingConfig,
     x2, g2, occ2 = _graft(store.x, store.graph, store.occupied, new_x,
                           jnp.asarray(slots), cand_ids, cand_d, cfg, mesh,
                           f_pad)
+    qx2 = store.qx
+    if qx2 is not None:
+        # encode into the *frozen* code space (scale/zero/codebooks trained
+        # at quantize time) — no retraining per batch, so build-side and
+        # serve-side codes for a row never depend on when it arrived. Points
+        # outside the trained int8 range clip; retrain via
+        # store.quantize_store after heavy drift.
+        from repro.quant import encode_rows
+        qx2 = qx2._replace(
+            codes=qx2.codes.at[jnp.asarray(slots)].set(
+                encode_rows(new_x, qx2)))
     return Store(x=x2, graph=g2, occupied=occ2, tombstone=store.tombstone,
-                 epoch=store.epoch + 1), slots
+                 epoch=store.epoch + 1, qx=qx2), slots
 
 
 # ------------------------------------------------------------------- delete
@@ -440,4 +451,4 @@ def delete(store: Store, ids, cfg: StreamingConfig, mesh=None) -> Store:
     g2 = _repair(store.x, store.graph, tomb_new, jnp.asarray(a_idx), cfg,
                  mesh)
     return Store(x=store.x, graph=g2, occupied=store.occupied,
-                 tombstone=tomb_new, epoch=store.epoch + 1)
+                 tombstone=tomb_new, epoch=store.epoch + 1, qx=store.qx)

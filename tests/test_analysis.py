@@ -200,8 +200,8 @@ class TestKernelCheck:
         names = {s.name.split("[")[0] for s in specs}
         # every kernel package must export specs — a package silently
         # dropping out of all_specs() would turn the checker off for it
-        assert names == {"beam_score", "rng_prune", "pairwise_l2",
-                         "fm_interact"}, names
+        assert names == {"beam_score", "beam_score_int8", "beam_score_pq",
+                         "rng_prune", "pairwise_l2", "fm_interact"}, names
         for spec in specs:
             assert not KC.check_spec(spec), spec.name
 

@@ -149,3 +149,81 @@ def test_streaming_restore_missing_raises(tmp_path):
 
     with pytest.raises(FileNotFoundError):
         StreamingANN.restore(str(tmp_path / "void"))
+
+
+# ----------------------------------------------------- quantized persistence
+def _qx_equal(a, b):
+    assert (a is None) == (b is None)
+    if a is None:
+        return
+    assert a.mode == b.mode
+    assert np.array_equal(np.asarray(a.codes), np.asarray(b.codes))
+    for fa, fb in ((a.scale, b.scale), (a.zero, b.zero),
+                   (a.codebooks, b.codebooks)):
+        assert (fa is None) == (fb is None)
+        if fa is not None:
+            assert np.array_equal(np.asarray(fa), np.asarray(fb))
+
+
+@pytest.mark.parametrize("mode", ("int8", "pq"))
+def test_sharded_quantized_roundtrip_across_mesh(corpus, tmp_path, mode):
+    """A quantized index — codes plus scale/zero (int8) or codebooks (pq) —
+    saves on one mesh shape and restores on another (and on none), with the
+    codes bit-identical and the *coded* search (fused kernel + rerank tail)
+    returning bitwise-equal results. Unquantized checkpoints keep the legacy
+    bare-graph format (covered by test_roundtrip_single_device)."""
+    from repro.quant import Quantization
+
+    x, q = corpus
+    quant = Quantization(mode=mode, m=8, rerank_k=16)
+    import dataclasses
+    cfg = dataclasses.replace(CFG, quant=quant)
+    scfg = S.SearchConfig(l=16, k=12, max_iters=48, topk=5, quant=quant,
+                          use_pallas=True)
+    wide = make_mesh((jax.device_count(),), ("data",))
+    ann = ShardedANN.build(x, cfg=cfg, key=jax.random.PRNGKey(1), mesh=wide)
+    assert ann.qx is not None and ann.qx.mode == mode
+    ids0, d0 = ann.search(q, scfg, tile_b=16)
+    ann.save(str(tmp_path))
+
+    narrow = make_mesh((max(jax.device_count() // 2, 1),), ("data",))
+    for target in (narrow, None):
+        back = ShardedANN.restore(str(tmp_path), x, mesh=target)
+        _graphs_equal(ann.graph, back.graph)
+        _qx_equal(ann.qx, back.qx)
+        ids1, d1 = back.search(q, scfg, tile_b=16)
+        assert np.array_equal(np.asarray(ids0), np.asarray(ids1))
+        assert np.array_equal(np.asarray(G.dist_key(d0)),
+                              np.asarray(G.dist_key(d1)))
+
+
+@pytest.mark.parametrize("mode", ("int8", "pq"))
+def test_streaming_quantized_roundtrip(corpus, tmp_path, mode):
+    """A churned *quantized* streaming store (codes riding insert/delete)
+    round-trips: the restore probes the manifest for the optional qx
+    subtree, and coded search over the restored store is bitwise-equal."""
+    from repro.quant import Quantization
+    from repro.streaming import StreamingANN, StreamingConfig
+
+    x, q = corpus
+    quant = Quantization(mode=mode, m=8, rerank_k=16)
+    import dataclasses
+    cfg = StreamingConfig(build=dataclasses.replace(CFG, quant=quant),
+                          seed_l=24, seed_k=10, seed_iters=48,
+                          batch_k=4, sweeps=2, splice_k=6)
+    scfg = S.SearchConfig(l=16, k=12, max_iters=48, topk=5, quant=quant,
+                          use_pallas=True)
+    ann = StreamingANN.from_corpus(x[:600], cfg, key=jax.random.PRNGKey(1))
+    ann.insert(x[600:700])
+    ann.delete(np.arange(0, 40))
+    assert ann.store.qx is not None and ann.store.qx.mode == mode
+    ids0, d0 = ann.search(q, scfg, tile_b=16)
+    ann.save(str(tmp_path))
+
+    back = StreamingANN.restore(str(tmp_path), cfg)
+    _streaming_stores_equal(ann.store, back.store)
+    _qx_equal(ann.store.qx, back.store.qx)
+    ids1, d1 = back.search(q, scfg, tile_b=16)
+    assert np.array_equal(np.asarray(ids0), np.asarray(ids1))
+    assert np.array_equal(np.asarray(G.dist_key(d0)),
+                          np.asarray(G.dist_key(d1)))

@@ -1,0 +1,261 @@
+"""Quantized corpus: codecs, fused decode+score kernel parity, config
+validation, and end-to-end quantized search identity.
+
+The parity contract mirrors tests/test_beam_score.py but for the coded
+kernels: fused Pallas (interpret on CPU) vs the jnp decode oracle, *bitwise*
+on ids, distances, and sort keys. Both sides run jitted and share one
+scoring function (``int8_score_block`` / ``pq_score_codes``) with decode
+applied AFTER the gather in the same op order, so XLA picks the same FMA
+contractions and every bit matches — eager-vs-jit recomputations of the
+same math may differ in the last ulp and are deliberately not the pinned
+oracle."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core import search as S
+from repro.kernels.beam_score import (
+    beam_score_int8, beam_score_int8_ref, beam_score_pq, beam_score_pq_ref,
+)
+from repro.kernels.rng_prune import rng_prune, rng_prune_int8, rng_prune_int8_ref
+from repro.quant import (
+    Quantization, corpus_bytes, dequantize, encode_corpus, encode_rows,
+    pq_lut, quantize_int8, train_pq,
+)
+
+METRICS = ("l2", "ip", "cos")
+
+
+def _setup(seed=0, n=120, d=16, m=12, b=24, n_valid=9):
+    kx, kn, ku, kq = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(kx, (n, d), jnp.float32)
+    nbrs = jax.random.randint(kn, (n, m), 0, n, jnp.int32)
+    nbrs = nbrs.at[:, n_valid:].set(-1)          # padded adjacency slots
+    u = jax.random.randint(ku, (b,), 0, n, jnp.int32)
+    q = jax.random.normal(kq, (b, d), jnp.float32)
+    return x, nbrs, u, q
+
+
+# ------------------------------------------------------------------- codecs
+def test_int8_codec_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (200, 24), jnp.float32) * 3
+    qx = quantize_int8(x)
+    assert qx.codes.dtype == jnp.int8 and qx.mode == "int8"
+    c = np.asarray(qx.codes)
+    assert c.min() >= -127 and c.max() <= 127   # -128 reserved
+    xh = np.asarray(dequantize(qx))
+    # symmetric rounding: |error| <= scale/2 per dim
+    err = np.abs(xh - np.asarray(x))
+    assert (err <= np.asarray(qx.scale)[None, :] * 0.5 + 1e-7).all()
+    # frozen-space re-encode of existing rows reproduces the stored codes
+    again = np.asarray(encode_rows(x[:50], qx))
+    np.testing.assert_array_equal(again, c[:50])
+
+
+def test_pq_codec_deterministic_and_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(1), (300, 24), jnp.float32)
+    q1 = encode_corpus(x, Quantization(mode="pq", m=6))
+    q2 = encode_corpus(x, Quantization(mode="pq", m=6))
+    assert q1.codes.dtype == jnp.uint8 and q1.mode == "pq"
+    np.testing.assert_array_equal(np.asarray(q1.codes), np.asarray(q2.codes))
+    np.testing.assert_array_equal(np.asarray(q1.codebooks),
+                                  np.asarray(q2.codebooks))
+    # decode error shrinks vs a 1-iteration codebook (Lloyd improves)
+    q_rough = encode_corpus(x, Quantization(mode="pq", m=6, pq_iters=1))
+    e_full = float(jnp.mean((dequantize(q1) - x) ** 2))
+    e_rough = float(jnp.mean((dequantize(q_rough) - x) ** 2))
+    assert e_full <= e_rough + 1e-6
+
+
+def test_corpus_bytes_ratios():
+    n, d = 1000, 48
+    x = jax.random.normal(jax.random.PRNGKey(2), (n, d), jnp.float32)
+    bi = corpus_bytes(encode_corpus(x, Quantization(mode="int8")), n, d)
+    assert bi["payload_ratio"] == pytest.approx(4.0)
+    bp = corpus_bytes(encode_corpus(x, Quantization(mode="pq", m=16)), n, d)
+    assert bp["payload_ratio"] == pytest.approx(12.0)
+    assert bp["aux_bytes"] == 16 * 256 * 3 * 4   # codebooks are O(1) aux
+    assert corpus_bytes(None, n, d)["payload_ratio"] == 1.0
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        Quantization(mode="int4")
+    with pytest.raises(ValueError):
+        Quantization(mode="pq", m=0)
+    with pytest.raises(ValueError):
+        Quantization(rerank_k=-1)
+    with pytest.raises(ValueError):      # coded corpus + bf16 gather conflict
+        S.SearchConfig(quant=Quantization(mode="int8"), gram_dtype="bf16")
+    with pytest.raises(ValueError):      # rerank tail smaller than topk
+        S.SearchConfig(quant=Quantization(mode="int8", rerank_k=4), topk=10)
+    x = jax.random.normal(jax.random.PRNGKey(0), (20, 9), jnp.float32)
+    with pytest.raises(ValueError):      # d not divisible by m
+        encode_corpus(x, Quantization(mode="pq", m=4))
+
+
+# ------------------------------------------------- fused kernel parity: int8
+def _assert_int8_bitwise(x, nbrs, u, q, k, metric, tile_b=16):
+    qx = quantize_int8(x)
+    ids, dists, keys = beam_score_int8(
+        qx.codes, qx.scale, qx.zero, nbrs, u, q, k=k, metric=metric,
+        tile_b=tile_b, interpret=True)
+    rids, rdists, rkeys = jax.jit(
+        beam_score_int8_ref, static_argnames=("k", "metric"))(
+        qx.codes, qx.scale, qx.zero, nbrs, u, q, k=k, metric=metric)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(rids))
+    np.testing.assert_array_equal(np.asarray(keys), np.asarray(rkeys))
+    np.testing.assert_array_equal(np.asarray(dists), np.asarray(rdists))
+    return ids, dists, keys
+
+
+def _assert_pq_bitwise(x, nbrs, u, q, k, metric, m=4, tile_b=16):
+    qx = encode_corpus(x, Quantization(mode="pq", m=m))
+    lut_a, lut_b, qsq = pq_lut(q, qx.codebooks, metric)
+    ids, dists, keys = beam_score_pq(
+        qx.codes, nbrs, u, lut_a, lut_b, qsq, k=k, metric=metric,
+        tile_b=tile_b, interpret=True)
+    rids, rdists, rkeys = jax.jit(
+        beam_score_pq_ref, static_argnames=("k", "metric"))(
+        qx.codes, nbrs, u, lut_a, lut_b, qsq, k=k, metric=metric)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(rids))
+    np.testing.assert_array_equal(np.asarray(keys), np.asarray(rkeys))
+    np.testing.assert_array_equal(np.asarray(dists), np.asarray(rdists))
+    return ids, dists, keys
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_int8_kernel_bitwise_parity(metric):
+    x, nbrs, u, q = _setup()
+    ids, dists, keys = _assert_int8_bitwise(x, nbrs, u, q, 12, metric)
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    # padded adjacency slots surface as (-1, +inf); keys decode exactly
+    assert ((ids == -1) == np.isinf(dists)).all()
+    assert (ids[:, :9] >= 0).all() and (ids[:, 9:] == -1).all()
+    np.testing.assert_array_equal(np.asarray(G.key_dist(keys)), dists)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_pq_kernel_bitwise_parity(metric):
+    x, nbrs, u, q = _setup()
+    ids, dists, keys = _assert_pq_bitwise(x, nbrs, u, q, 12, metric)
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    assert ((ids == -1) == np.isinf(dists)).all()
+    np.testing.assert_array_equal(np.asarray(G.key_dist(keys)), dists)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_quant_kernel_edge_cases(metric):
+    # B=1 frontier
+    x, nbrs, u, q = _setup(seed=4, b=1)
+    _assert_int8_bitwise(x, nbrs, u, q, 12, metric)
+    _assert_pq_bitwise(x, nbrs, u, q, 12, metric)
+    # frontier smaller than the kernel tile (tile clamps + pads)
+    x, nbrs, u, q = _setup(seed=5, b=5)
+    _assert_int8_bitwise(x, nbrs, u, q, 12, metric, tile_b=64)
+    _assert_pq_bitwise(x, nbrs, u, q, 12, metric, tile_b=64)
+    # frontier not a multiple of the tile (pad-and-slice path)
+    x, nbrs, u, q = _setup(seed=6, b=21)
+    _assert_int8_bitwise(x, nbrs, u, q, 12, metric, tile_b=8)
+    _assert_pq_bitwise(x, nbrs, u, q, 12, metric, tile_b=8)
+
+
+# -------------------------------------------------- rng_prune int8 parity
+@pytest.mark.parametrize("n", (30, 13, 1))
+def test_rng_prune_int8_parity(n):
+    kx, ki, kd = jax.random.split(jax.random.PRNGKey(7), 3)
+    d, m = 16, 8
+    x = jax.random.normal(kx, (max(n, 40), d), jnp.float32)
+    qx = quantize_int8(x)
+    ids = jax.random.randint(ki, (n, m), -1, x.shape[0], jnp.int32)
+    dists = jnp.where(ids >= 0,
+                      jnp.abs(jax.random.normal(kd, (n, m))), jnp.inf)
+    dists = jnp.sort(dists, axis=1)
+    flags = jnp.ones((n, m), jnp.uint8)
+    keep, rw, rd_ = rng_prune_int8(qx.codes, qx.scale, qx.zero, ids, dists,
+                                   flags=flags, interpret=True)
+    rkeep, rrw, rrd = jax.jit(rng_prune_int8_ref)(
+        qx.codes, qx.scale, qx.zero, ids, dists, flags)
+    np.testing.assert_array_equal(np.asarray(keep), np.asarray(rkeep))
+    np.testing.assert_array_equal(np.asarray(rw), np.asarray(rrw))
+    np.testing.assert_array_equal(np.asarray(rd_).view(np.uint32),
+                                  np.asarray(rrd).view(np.uint32))
+    # and the int8 prune agrees with the f32 prune over the decoded corpus
+    # on the keep/redirect *decisions* (same geometry, fused decode)
+    xh = dequantize(qx)
+    keep_f, _, _ = rng_prune(xh, ids, dists, flags, interpret=True)
+    np.testing.assert_array_equal(np.asarray(keep), np.asarray(keep_f))
+
+
+# ------------------------------------------- end-to-end search parity
+def _search_setup(n=400, d=32, nq=12, seed=11):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((nq, d)), jnp.float32)
+    from repro.core import rnn_descent as rd
+    g = rd.build(x, rd.RNNDescentConfig(s=8, r=16, capacity=16, t1=2, t2=3,
+                                        chunk=128), jax.random.PRNGKey(0))
+    return x, g, q
+
+
+def _bitwise(a, b):
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]).view(np.uint32),
+                                  np.asarray(b[1]).view(np.uint32))
+
+
+@pytest.mark.parametrize("mode", ("int8", "pq"))
+@pytest.mark.parametrize("visited", ("hashed", "dense"))
+def test_quant_search_fused_vs_oracle(mode, visited):
+    x, g, q = _search_setup()
+    quant = Quantization(mode=mode, m=8, rerank_k=16)
+    qx = encode_corpus(x, quant)
+    cfg = S.SearchConfig(l=24, topk=8, quant=quant, visited=visited)
+    ep = S.default_entry_point(x)
+    r_o = S.search(x, g, q, ep, cfg, qx=qx)
+    r_f = S.search(x, g, q, ep, dataclasses.replace(cfg, use_pallas=True),
+                   qx=qx)
+    _bitwise(r_o, r_f)
+    ids = np.asarray(r_o[0])
+    assert (ids >= 0).all() and (np.diff(np.asarray(r_o[1]), axis=1) >= 0).all()
+
+
+@pytest.mark.parametrize("mode", ("int8", "pq"))
+def test_quant_search_tiled_matches_search(mode):
+    x, g, q = _search_setup(nq=13)          # tile-non-divisible query count
+    quant = Quantization(mode=mode, m=8, rerank_k=16)
+    qx = encode_corpus(x, quant)
+    cfg = S.SearchConfig(l=24, topk=8, quant=quant, use_pallas=True)
+    ep = S.default_entry_point(x)
+    whole = S.search(x, g, q, ep, cfg, qx=qx)
+    tiled = S.search_tiled(x, g, q, ep, cfg, tile_b=4, qx=qx)
+    _bitwise(whole, tiled)
+
+
+def test_quant_search_requires_codes():
+    x, g, q = _search_setup()
+    cfg = S.SearchConfig(l=24, topk=8, quant=Quantization(mode="int8"))
+    with pytest.raises(ValueError):
+        S.search(x, g, q, S.default_entry_point(x), cfg)   # no qx supplied
+
+
+# ---------------------------------------------------- quantized builders
+def test_int8_build_pallas_parity():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((300, 24)), jnp.float32)
+    from repro.core import rnn_descent as rd
+    base = dict(s=8, r=16, capacity=16, t1=2, t2=3, chunk=128,
+                quant=Quantization(mode="int8"))
+    key = jax.random.PRNGKey(0)
+    g_j = rd.build_jit(x, rd.RNNDescentConfig(**base), key)
+    g_p = rd.build_jit(x, rd.RNNDescentConfig(**base, use_pallas=True), key)
+    np.testing.assert_array_equal(np.asarray(g_j.neighbors),
+                                  np.asarray(g_p.neighbors))
+    np.testing.assert_array_equal(np.asarray(g_j.flags),
+                                  np.asarray(g_p.flags))
+    np.testing.assert_array_equal(np.asarray(g_j.dists).view(np.uint32),
+                                  np.asarray(g_p.dists).view(np.uint32))

@@ -79,6 +79,41 @@ def test_results_sorted_unique_valid(built):
         assert len(set(row.tolist())) == len(row), f"{name}: duplicate results"
 
 
+def _quant_search(x, g, q, quant, l=32):
+    from repro.quant import encode_corpus
+    qx = encode_corpus(x, quant) if quant.is_coded else None
+    cfg = dataclasses.replace(CFG, l=l, quant=quant)
+    eps = _entries(x, q.shape[0])
+    ids, _ = S.search_tiled(x, g, q, eps, cfg, tile_b=64, qx=qx)
+    fused = dataclasses.replace(cfg, use_pallas=True)
+    ids_f, _ = S.search_tiled(x, g, q, eps, fused, tile_b=64, qx=qx)
+    np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids))
+    return ids
+
+
+def test_quantized_recall_floors(small_dataset):
+    """The PR's acceptance bars, as regression floors: serving the same
+    rnn-descent graph from int8 codes costs <= 0.03 recall@10 vs f32, PQ
+    codes with the exact-f32 rerank tail cost <= 0.05, and the rerank tail
+    strictly improves the raw PQ ranking (which quantization noise alone
+    pushes far below the floor). Fused-vs-oracle identity is asserted
+    inside each quantized search."""
+    from repro.quant import Quantization
+
+    x, q, gt = small_dataset
+    g = BUILDERS["rnn-descent"](x)
+    r_f32 = E.recall_topk(_quant_search(x, g, q, Quantization()), gt)
+    r_i8 = E.recall_topk(
+        _quant_search(x, g, q, Quantization(mode="int8")), gt)
+    assert r_f32 - r_i8 <= 0.03, (r_f32, r_i8)
+    pq = Quantization(mode="pq", m=16)
+    r_pq = E.recall_topk(_quant_search(x, g, q, pq), gt)
+    assert r_f32 - r_pq <= 0.05, (r_f32, r_pq)
+    r_raw = E.recall_topk(
+        _quant_search(x, g, q, dataclasses.replace(pq, rerank_k=0)), gt)
+    assert r_pq > r_raw, (r_pq, r_raw)
+
+
 def test_bf16_gather_recall_close(small_dataset):
     """bf16 gathers change distances in the last bits, not search quality:
     fused and oracle stay identical to each other, and recall stays within

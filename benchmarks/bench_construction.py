@@ -49,9 +49,12 @@ def sharded_rows(built=None) -> list[dict]:
     ``built`` maps (dataset, method) -> (x, seconds_single, graph_single) to
     reuse builds a caller already timed (run() passes its figure-3 builds).
     On a 1-device mesh the rows still exercise the full sharded code path
-    (padding, partial tables, the degenerate all_to_all); under the CI mesh
-    job (XLA_FLAGS=--xla_force_host_platform_device_count=8) the exchange
-    crosses 8 shards — parity must hold either way and is asserted in CI."""
+    (padding, destination-bucketed scatter blocks, the degenerate 1-shard
+    exchange); under the CI mesh job
+    (XLA_FLAGS=--xla_force_host_platform_device_count=8) the ring ppermute
+    exchange really crosses 8 shards — each hop ships one (n_pad/D, B)
+    block to its destination peer, never a full-height table — and parity
+    must hold either way, asserted in CI."""
     import jax
 
     mesh = common.ann_mesh()

@@ -136,10 +136,14 @@ def fused_rows(l_values=(8, 16, 32, 64), built=None) -> list[dict]:
 
 
 def sharded_rows(l_values=(16, 32), built=None) -> list[dict]:
-    """Sharded-vs-single serving QPS + parity: the same query stream through
-    ``search_tiled`` with and without the full-width mesh (query tiles shard
-    across the "queries" logical axis, corpus + graph replicated). Records
-    the bitwise-parity bit asserted in CI — ids AND dist bits must match.
+    """Sharded-vs-single serving QPS + parity for *both* sharding layouts:
+    the same query stream through ``search_tiled`` without a mesh, with
+    query-tile sharding (``shard="queries"``: corpus + graph replicated),
+    and with corpus sharding (``shard="corpus"``: x, adjacency and codes
+    row-partitioned, frontier gathers routed through collectives). Records
+    the bitwise-parity bit asserted in CI — ids AND dist bits must match —
+    plus the per-device corpus+graph resident bytes of each layout, the
+    number the corpus-sharded path exists to shrink (~n/D vs n).
 
     On a single CPU core the sharded QPS mostly tracks thread contention
     between the forged host devices; on real multi-device hardware the same
@@ -149,6 +153,7 @@ def sharded_rows(l_values=(16, 32), built=None) -> list[dict]:
     from repro.core import eval as E
     from repro.core import graph as G
     from repro.core import search as S
+    from repro.core import search_sharded as SS
 
     mesh = common.ann_mesh()
     devices = jax.device_count()
@@ -160,30 +165,38 @@ def sharded_rows(l_values=(16, 32), built=None) -> list[dict]:
             x, q, gt = common.dataset(ds)
             _, g = common.build_timed("rnn-descent", x)
         ep = S.default_entry_point(x)
+        place = SS.corpus_placement_bytes(
+            x.shape[0], x.shape[1], g.capacity, devices)
         for L in l_values:
             cfg = S.SearchConfig(l=L, k=32, max_iters=2 * L + 32)
             sec_1, (ids_1, d_1) = E.timed(
                 S.search_tiled, x, g, q, ep, cfg, tile_b=256, repeats=2)
-            sec_m, (ids_m, d_m) = E.timed(
-                S.search_tiled, x, g, q, ep, cfg, tile_b=256, mesh=mesh,
-                repeats=2)
-            row = {
-                "bench": "search-sharded", "dataset": ds,
-                "method": "rnn-descent", "L": L, "devices": devices,
-                "qps_single": round(q.shape[0] / sec_1, 1),
-                "qps_sharded": round(q.shape[0] / sec_m, 1),
-                "parity": bool(
-                    np.array_equal(np.asarray(ids_1), np.asarray(ids_m))
-                    and np.array_equal(np.asarray(G.dist_key(d_1)),
-                                       np.asarray(G.dist_key(d_m)))),
-                "recall_at_1": round(E.recall_at_k(ids_1, gt), 4),
-            }
-            rows.append(row)
-            common.emit(
-                f"search-sharded/{ds}/L{L}",
-                1e6 / max(row["qps_sharded"], 1e-9),
-                f"devices={devices},qps_single={row['qps_single']},"
-                f"qps_sharded={row['qps_sharded']},parity={row['parity']}")
+            for shard_mode in ("queries", "corpus"):
+                sec_m, (ids_m, d_m) = E.timed(
+                    S.search_tiled, x, g, q, ep, cfg, tile_b=256, mesh=mesh,
+                    shard=shard_mode, repeats=2)
+                resident = place[
+                    "sharded" if shard_mode == "corpus" else "replicated"]
+                row = {
+                    "bench": "search-sharded", "dataset": ds,
+                    "method": "rnn-descent", "L": L, "devices": devices,
+                    "shard": shard_mode,
+                    "qps_single": round(q.shape[0] / sec_1, 1),
+                    "qps_sharded": round(q.shape[0] / sec_m, 1),
+                    "parity": bool(
+                        np.array_equal(np.asarray(ids_1), np.asarray(ids_m))
+                        and np.array_equal(np.asarray(G.dist_key(d_1)),
+                                           np.asarray(G.dist_key(d_m)))),
+                    "recall_at_1": round(E.recall_at_k(ids_1, gt), 4),
+                    "per_device_corpus_graph_bytes": resident,
+                }
+                rows.append(row)
+                common.emit(
+                    f"search-sharded/{ds}/{shard_mode}/L{L}",
+                    1e6 / max(row["qps_sharded"], 1e-9),
+                    f"devices={devices},qps_single={row['qps_single']},"
+                    f"qps_sharded={row['qps_sharded']},"
+                    f"parity={row['parity']},resident_bytes={resident}")
     _update_root(sharded_rows=rows)
     return rows
 

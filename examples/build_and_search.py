@@ -32,12 +32,26 @@ Both halves of the system run on a ``jax.sharding.Mesh``; results are
     mesh = jax.make_mesh((jax.device_count(),), ("data",))
 
     # construction: graph rows shard across the mesh (core/shard.py);
-    # x is replicated and shards exchange candidate bucket tables with an
-    # all_to_all reduce-scatter-min — every builder takes mesh=
+    # x is replicated and each shard ships destination-bucketed
+    # (n_pad/D, B) scatter blocks around a ppermute ring, folding the
+    # running min as blocks arrive — every builder takes mesh=
     g = rd.build(x, cfg, key, mesh=mesh)
 
-    # serving: query tiles shard across the mesh; corpus + graph replicated
+    # serving, two layouts. Query-tile sharding replicates corpus + graph
+    # and splits the batch: per-device resident bytes stay the full
+    # n*(d*4) + n*capacity*9 — fastest while the index fits
     ids, dists = S.search_tiled(x, g, q, entry, scfg, tile_b=256, mesh=mesh)
+
+    # corpus sharding divides the index instead: each device keeps
+    # ~n/D rows of x + adjacency (+ codes), so per-device bytes are
+    #   (n/D) * (d*4 + capacity*9)        f32 corpus
+    #   (n/D) * (d   + capacity*9)        int8 codes
+    #   (n/D) * (m   + capacity*9)        pq codes
+    # and the beam's frontier gathers ride owner-contribute collectives —
+    # bitwise-equal results at ~1/D the footprint (the 100M-row unlock;
+    # core/search_sharded.corpus_placement_bytes computes the table above)
+    ids, dists = S.search_tiled(x, g, q, entry, scfg, tile_b=256, mesh=mesh,
+                                shard="corpus")
 
 On CPU, forge devices to try it (set BEFORE any jax import / in the shell):
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — that is exactly how
@@ -188,8 +202,17 @@ assert np.array_equal(np.asarray(g_shard.neighbors),
                       np.asarray(last_graph.neighbors)), "sharded build diverged"
 ids_1, _ = S.search_tiled(x, last_graph, q, entry, scfg, tile_b=128)
 ids_m, _ = S.search_tiled(x, last_graph, q, entry, scfg, tile_b=128, mesh=mesh)
+ids_c, _ = S.search_tiled(x, last_graph, q, entry, scfg, tile_b=128, mesh=mesh,
+                          shard="corpus")
+from repro.core.search_sharded import corpus_placement_bytes
+place = corpus_placement_bytes(x.shape[0], x.shape[1], last_graph.capacity,
+                               jax.device_count())
 print(f"sharded[{jax.device_count()} dev]          build parity True  "
-      f"search parity {bool(np.array_equal(np.asarray(ids_1), np.asarray(ids_m)))}")
+      f"search parity {bool(np.array_equal(np.asarray(ids_1), np.asarray(ids_m)))}  "
+      f"corpus-sharded parity "
+      f"{bool(np.array_equal(np.asarray(ids_1), np.asarray(ids_c)))}  "
+      f"resident/dev {place['replicated'] // 1024} KiB -> "
+      f"{place['sharded'] // 1024} KiB")
 
 # streaming churn (see "Streaming updates" above): insert 20% new points and
 # delete 10% of the originals without a rebuild, then serve tombstone-aware

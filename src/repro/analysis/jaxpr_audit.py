@@ -78,6 +78,10 @@ _TAINT_FLOW = {
     "top_k",
     # pallas VMEM ref movement (kernel bodies): loads/stores of keys
     "get", "swap", "masked_load", "masked_swap",
+    # cross-device data movement (corpus-sharded serving ships dist-key
+    # tables between owners — a pure permutation, ordinal-safe; reductions
+    # over keys must still go through min/max, never psum)
+    "all_to_all", "ppermute", "all_gather",
 }
 _TAINT_SINK = {"eq", "ne", "lt", "le", "gt", "ge", "argmin", "argmax",
                "reduce_and", "reduce_or", "is_finite"}

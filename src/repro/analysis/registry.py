@@ -179,6 +179,18 @@ def _trace_search_tiled_sharded():
     )(_x(), _graph(), _queries(), valid)
 
 
+def _trace_search_tiled_corpus():
+    from repro.core import search as S
+    cfg = _search_cfg()
+    mesh = _mesh1()
+    valid = jax.ShapeDtypeStruct((N,), jnp.bool_)
+    return jax.make_jaxpr(
+        lambda x, g, q, v: S.search_tiled(x, g, q, jnp.int32(0), cfg,
+                                          tile_b=2, mesh=mesh, valid=v,
+                                          shard="corpus")
+    )(_x(), _graph(), _queries(), valid)
+
+
 def _qx_int8():
     from repro.quant import QuantizedCorpus
     return QuantizedCorpus(
@@ -306,6 +318,7 @@ _REGISTRY = {
     "core/search.search@pq": _trace_search_pq,
     "core/search.search_tiled": _trace_search_tiled,
     "core/search.search_tiled@mesh": _trace_search_tiled_sharded,
+    "core/search.search_tiled@corpus-mesh": _trace_search_tiled_corpus,
     "core/search.search_tiled@pq-pallas": _trace_search_tiled_pq_pallas,
     "streaming/updates.insert": _trace_streaming_insert,
     "streaming/updates.delete": _trace_streaming_delete,

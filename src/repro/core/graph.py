@@ -329,6 +329,39 @@ def combine_bucket_tables(
     return p_min, k_min, i_min, f_max
 
 
+def combine_bucket_tables_pair(
+    a: tuple[jnp.ndarray | None, jnp.ndarray, jnp.ndarray, jnp.ndarray],
+    b: tuple[jnp.ndarray | None, jnp.ndarray, jnp.ndarray, jnp.ndarray],
+) -> tuple[jnp.ndarray | None, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Two-table :func:`combine_bucket_tables` without the stacked copy.
+
+    The staged fold is associative and commutative (integer min/max with a
+    tie-break aggregate), so accumulating partials pairwise — as the ring
+    exchange in core/shard.py does, one peer block per hop — is *bitwise*
+    equal to stacking all partials and folding once."""
+    pa, ka, ia, fa = a
+    pb, kb, ib, fb = b
+    alive_a = jnp.ones(ka.shape, bool)
+    alive_b = jnp.ones(kb.shape, bool)
+    p_min = None
+    if pa is not None:
+        p_min = jnp.minimum(pa, pb)
+        alive_a = pa == p_min
+        alive_b = pb == p_min
+    k_min = jnp.minimum(jnp.where(alive_a, ka, _KEY_SENTINEL),
+                        jnp.where(alive_b, kb, _KEY_SENTINEL))
+    alive_a &= ka == k_min
+    alive_b &= kb == k_min
+    i_big = jnp.iinfo(jnp.int32).max
+    i_min = jnp.minimum(jnp.where(alive_a, ia, i_big),
+                        jnp.where(alive_b, ib, i_big))
+    alive_a &= ia == i_min
+    alive_b &= ib == i_min
+    f_max = jnp.maximum(jnp.where(alive_a, fa, jnp.uint8(0)),
+                        jnp.where(alive_b, fb, jnp.uint8(0)))
+    return p_min, k_min, i_min, f_max
+
+
 def decode_bucket_tables(
     k_tab: jnp.ndarray, i_tab: jnp.ndarray, f_tab: jnp.ndarray,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:

@@ -264,6 +264,32 @@ def _validate_entry_points(entry_points, b: int, l: int) -> jnp.ndarray:
 
 
 # -------------------------------------------------------------------- core
+class ScoreHooks:
+    """Pluggable scoring backend for :func:`_search_impl`.
+
+    The corpus-sharded serving path (core/search_sharded.py) reuses the
+    beam body — seeding, visited dedup, merge, retirement, rerank — and
+    swaps only the places that touch corpus-sized state for
+    owner-contribute collectives. Every hook must return values *bitwise
+    equal* to the single-device computation it replaces; that is the whole
+    parity argument for ``shard="corpus"``.
+
+    ``n``/``capacity`` replace ``x.shape[0]``/``g.capacity`` (x and g are
+    row-sharded, so their local shapes lie about the corpus); ``seed``,
+    ``beam`` and ``rerank`` replace the three scoring sites; ``any_active``
+    replaces ``jnp.any`` in the termination flag — under ``shard_map`` the
+    while condition must be uniform across devices, so the corpus path
+    psums it."""
+
+    def __init__(self, n, capacity, seed, beam, rerank, any_active):
+        self.n = n                  # global corpus size
+        self.capacity = capacity    # global graph capacity (row width)
+        self.seed = seed            # (B, E) eps -> (B, E) f32 seed distances
+        self.beam = beam            # (B,) u -> ((B, K) nbrs, (B, K) cand_d)
+        self.rerank = rerank        # (B, R) rids -> (B, R) exact f32
+        self.any_active = any_active  # (B,) bool -> scalar bool (global)
+
+
 def _search_impl(
     x: jnp.ndarray,
     g: G.Graph,
@@ -272,20 +298,27 @@ def _search_impl(
     cfg: SearchConfig,
     valid: jnp.ndarray | None = None,   # (n,) bool — see tombstone note below
     qx: QuantizedCorpus | None = None,  # codes when cfg.quant is int8/pq
-) -> tuple[jnp.ndarray, jnp.ndarray]:
-    n = x.shape[0]
+    lane_valid: jnp.ndarray | None = None,  # (B,) bool — padded lanes False
+    hooks: ScoreHooks | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (ids, dists, work, iters): results plus per-lane expansion
+    counts and the executed iteration count (for the work-regression
+    accounting in :func:`search_tiled` — ``work`` sums the lanes that were
+    active each iteration, so it is invariant to how lanes are tiled)."""
+    n = x.shape[0] if hooks is None else hooks.n
     b = queries.shape[0]
     e = eps.shape[1]
-    k = min(cfg.k, g.capacity)
+    k = min(cfg.k, g.capacity if hooks is None else hooks.capacity)
     rows = jnp.arange(b)
     dense = cfg.visited == "dense"
     slots = resolve_slots(cfg, e)
+    any_fn = jnp.any if hooks is None else hooks.any_active
     qmode = cfg.quant.mode if cfg.quant.is_coded else None
-    if qmode and qx is None:
+    if qmode and qx is None and hooks is None:
         raise ValueError(
             f"cfg.quant selects mode {qmode!r} but no quantized corpus was "
             "passed (qx=) — encode with repro.quant.encode_corpus")
-    if qmode == "pq":
+    if qmode == "pq" and hooks is None:
         # the query-to-centroid LUT is loop-invariant across beam iterations:
         # computed once per query batch here, closed over by the loop body
         # (and by the seed scoring below), never recomputed
@@ -305,7 +338,9 @@ def _search_impl(
         & (jnp.arange(e)[None, :, None] > jnp.arange(e)[None, None, :]),
         axis=-1,
     )
-    if qmode == "int8":
+    if hooks is not None:
+        ep_d = hooks.seed(eps)                                    # (B, E)
+    elif qmode == "int8":
         ep_d = int8_score_block(qx.codes[eps], qx.scale, qx.zero,
                                 queries, cfg.metric)              # (B, E)
     elif qmode == "pq":
@@ -330,14 +365,21 @@ def _search_impl(
         visited = jnp.full((b, slots), -1, jnp.int32)
         _, visited = _visited_lookup_insert(visited, eps, ~dup, rows, cfg.probes)
 
-    done = jnp.zeros((b,), bool)
+    # padded lanes (query-count padding in search_tiled) start retired: they
+    # never expand, never score, and a tile made entirely of padding exits
+    # its loop at iteration 0 instead of spinning to max_iters
+    done = jnp.zeros((b,), bool) if lane_valid is None else ~lane_valid
+    work = jnp.zeros((b,), jnp.int32)
 
     def cond(state):
-        _, _, _, _, done, it = state
-        return jnp.logical_and(it < cfg.max_iters, jnp.any(~done))
+        # the go flag is carried in state (computed in the body / before the
+        # loop) rather than reduced here: under shard="corpus" the reduction
+        # is a psum and collectives cannot live in a while condition
+        _, _, _, _, _, it, _, go = state
+        return jnp.logical_and(it < cfg.max_iters, go)
 
     def body(state):
-        beam_ids, beam_d, expanded, visited, done, it = state
+        beam_ids, beam_d, expanded, visited, done, it, work, _ = state
         frontier = jnp.where(expanded, jnp.inf, beam_d)
         slot = jnp.argmin(frontier, axis=1)                       # (B,)
         best_unexp = frontier[rows, slot]
@@ -348,6 +390,7 @@ def _search_impl(
         # tile's while_loop exit without waiting on other tiles.
         done = done | (best_unexp > beam_d[:, -1]) | ~jnp.isfinite(best_unexp)
         active = ~done
+        work = work + active.astype(jnp.int32)
         u = jnp.where(active, beam_ids[rows, slot], 0)
         expanded = expanded.at[rows, slot].max(active)
 
@@ -357,7 +400,11 @@ def _search_impl(
         # candidate block lives (VMEM vs an HBM intermediate). Under int8/pq
         # the gather reads *codes* (4x / d/m-fold less traffic) and decode
         # happens in-register next to the distance math.
-        if qmode == "int8":
+        if hooks is not None:
+            # owner-contribute collectives (corpus-sharded); bitwise equal
+            # to the jnp oracle below — including the coded paths
+            nbrs, cand_d = hooks.beam(u)
+        elif qmode == "int8":
             if cfg.use_pallas:
                 nbrs, cand_d, _ = beam_score_int8(
                     qx.codes, qx.scale, qx.zero, g.neighbors, u, queries,
@@ -408,10 +455,13 @@ def _search_impl(
         beam_d = -neg_d
         beam_ids = jnp.take_along_axis(all_ids, order, axis=1)
         expanded = jnp.take_along_axis(all_exp, order, axis=1)
-        return beam_ids, beam_d, expanded, visited, done, it + 1
+        return (beam_ids, beam_d, expanded, visited, done, it + 1, work,
+                any_fn(~done))
 
-    state = (beam_ids, beam_d, expanded, visited, done, jnp.int32(0))
-    beam_ids, beam_d, _, _, _, _ = jax.lax.while_loop(cond, body, state)
+    state = (beam_ids, beam_d, expanded, visited, done, jnp.int32(0), work,
+             any_fn(~done))
+    beam_ids, beam_d, _, _, _, iters, work, _ = jax.lax.while_loop(
+        cond, body, state)
     # beam rows are top_k-sorted ascending and duplicate-free by construction,
     # so the topk prefix is sorted-valid for any topk <= L
     rerank = min(cfg.quant.rerank_k, cfg.l) if qmode else 0
@@ -427,11 +477,14 @@ def _search_impl(
         masked_d = jnp.where(ok, beam_d, jnp.inf)
         neg_q, order = jax.lax.top_k(-masked_d, rerank)
         rids = jnp.take_along_axis(beam_ids, order, axis=1)       # (B, rerank)
-        exact = score_block(x[jnp.maximum(rids, 0)], queries, cfg.metric)
+        if hooks is not None:
+            exact = hooks.rerank(rids)
+        else:
+            exact = score_block(x[jnp.maximum(rids, 0)], queries, cfg.metric)
         exact = jnp.where(neg_q > -jnp.inf, exact, jnp.inf)
         neg_d, o2 = jax.lax.top_k(-exact, cfg.topk)
         out_ids = jnp.take_along_axis(rids, o2, axis=1)
-        return jnp.where(neg_d > -jnp.inf, out_ids, -1), -neg_d
+        return jnp.where(neg_d > -jnp.inf, out_ids, -1), -neg_d, work, iters
     if valid is not None:
         # tombstone-aware serving (streaming/): masked vertices traverse the
         # beam like any other (they are live bridges in the graph) but must
@@ -443,8 +496,8 @@ def _search_impl(
         masked_d = jnp.where(ok, beam_d, jnp.inf)
         neg_d, order = jax.lax.top_k(-masked_d, cfg.topk)
         out_ids = jnp.take_along_axis(beam_ids, order, axis=1)
-        return jnp.where(neg_d > -jnp.inf, out_ids, -1), -neg_d
-    return beam_ids[:, : cfg.topk], beam_d[:, : cfg.topk]
+        return jnp.where(neg_d > -jnp.inf, out_ids, -1), -neg_d, work, iters
+    return beam_ids[:, : cfg.topk], beam_d[:, : cfg.topk], work, iters
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -469,10 +522,13 @@ def search(
     is touched only by the exact rerank tail.
     """
     eps = _validate_entry_points(entry_points, queries.shape[0], cfg.l)
-    return _search_impl(x, g, queries, eps, cfg, valid=valid, qx=qx)
+    ids, dists, _, _ = _search_impl(x, g, queries, eps, cfg, valid=valid,
+                                    qx=qx)
+    return ids, dists
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "tile_b", "mesh"))
+@functools.partial(jax.jit, static_argnames=("cfg", "tile_b", "mesh", "shard",
+                                             "with_stats"))
 def search_tiled(
     x: jnp.ndarray,
     g: G.Graph,
@@ -483,7 +539,9 @@ def search_tiled(
     mesh=None,
     valid: jnp.ndarray | None = None,
     qx: QuantizedCorpus | None = None,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
+    shard: str = "queries",
+    with_stats: bool = False,
+):
     """Stream an arbitrary query count through B_tile-sized ``lax.map`` tiles.
 
     Only one tile's search state is alive at a time, so peak visited-state
@@ -491,23 +549,55 @@ def search_tiled(
     and (in hashed mode) the corpus size. Results match :func:`search`
     exactly; lanes in a finished tile never block lanes in another tile.
 
-    ``mesh``: a ``jax.sharding.Mesh`` shards the query *tiles* across the
+    ``mesh`` + ``shard="queries"`` (default): query *tiles* shard across the
     mesh axes the logical ``"queries"`` axis resolves to (RULES in
     distributed/sharding.py), with corpus and graph replicated per device —
-    each device streams its own tile subset, so throughput scales with the
-    device count while per-device visited memory stays O(tile_b * slots).
-    Lanes are independent and tile shapes are unchanged, so sharded results
-    are exactly equal (ids and dist bits) to ``mesh=None`` — asserted in
-    tests/test_sharded_parity.py — and the path composes with both
-    ``visited`` modes and ``use_pallas``.
+    each device streams its own tile subset. Per-device memory is the FULL
+    corpus (``n * d * 4`` bytes) plus O(tile_b * slots) visited state: this
+    mode divides queries, not data. Under a mesh the tile is shrunk toward
+    ``ceil(b / n_dev)`` so a small batch never pads to ``n_dev`` full tiles,
+    and query-count padding is lane-masked so padded lanes retire at
+    iteration 0. Lanes are independent, so sharded results are exactly
+    equal (ids and dist bits) to ``mesh=None`` — asserted in
+    tests/test_sharded_parity.py — composing with both ``visited`` modes
+    and ``use_pallas``.
+
+    ``mesh`` + ``shard="corpus"``: ``x``, the adjacency rows, and ``qx``
+    codes partition across the mesh's "rows" axis instead — per-device
+    corpus memory drops to ~``n/D`` rows (the regime where the corpus does
+    not fit one device) — and each beam step routes its frontier gathers
+    through owner-contribute collectives (core/search_sharded.py). Results
+    stay bitwise equal to single-device; ``use_pallas`` falls back to the
+    jnp scoring path (the kernels are bitwise-equal to it, so parity
+    holds either way).
 
     ``valid``: optional (n,) tombstone/padding mask (see :func:`search`) —
     replicated per device under a mesh, composing with every other option.
-    ``qx``: encoded corpus for ``cfg.quant`` int8/pq — replicated per device
-    like ``x`` (codes are a corpus-sized store, queries are what shard).
+    ``qx``: encoded corpus for ``cfg.quant`` int8/pq — replicated under
+    ``shard="queries"``, row-sharded under ``shard="corpus"``.
+    ``with_stats``: also return a stats dict {"work": total lane-iterations
+    actually expanded (tiling-invariant), "launched": iterations executed x
+    lanes launched, "tiles", "tile_lanes"} — the accounting the
+    work-regression tests pin down.
+
+    Returns (ids, dists), plus the stats dict when ``with_stats``.
     """
+    if shard not in ("queries", "corpus"):
+        raise ValueError(
+            f"unknown shard mode {shard!r}: expected \"queries\" (tiles "
+            "shard, corpus replicated) or \"corpus\" (rows shard, queries "
+            "tile through collectives)")
     b = queries.shape[0]
     eps = _validate_entry_points(entry_points, b, cfg.l)
+    if shard == "corpus":
+        if mesh is None:
+            raise ValueError(
+                "shard=\"corpus\" requires mesh=: corpus sharding partitions "
+                "x and the adjacency rows over the mesh's \"rows\" axis")
+        from repro.core import search_sharded as SS
+        return SS.search_tiled_corpus(x, g, queries, eps, cfg, tile_b, mesh,
+                                      valid=valid, qx=qx,
+                                      with_stats=with_stats)
     tile_b = min(tile_b, b) if b > 0 else 1   # b=0 -> zero tiles, empty result
     qaxes: tuple = ()
     n_dev = 1
@@ -515,19 +605,30 @@ def search_tiled(
         from repro.distributed import sharding as SH
         qaxes = SH.mesh_axes(mesh, "queries")
         n_dev = SH.axis_count(mesh, "queries")
-    # pad the tile count to the device count: padded lanes recompute the
-    # first entry point against a zero query and are sliced off
+        if n_dev > 1:
+            # shrink the tile toward an even lane split: b=100 on 8 devices
+            # used to pad to 8 full 100-lane tiles (800 beam searches for
+            # 100 queries); ceil(b / n_dev) caps the padding below one tile.
+            # Floor at 2 lanes: XLA:CPU lowers batch-1 score einsums
+            # differently than batch>=2 (last-bit divergence), so a 1-lane
+            # tile only ever appears when the mesh=None reference itself
+            # scores batch 1 (b=1 or tile_b=1) and shapes already match
+            tile_b = min(tile_b, max(2, -(-b // n_dev)))
+    # pad the lane count to tile_b * n_dev; padded lanes carry
+    # lane_valid=False and retire at iteration 0 (sliced off on exit)
     pad = (-b) % (tile_b * n_dev)
     q_p = jnp.pad(queries, ((0, pad), (0, 0)))
     eps_p = jnp.concatenate([eps, jnp.broadcast_to(eps[:1], (pad, eps.shape[1]))]) \
         if pad else eps
     q_tiles = q_p.reshape(-1, tile_b, queries.shape[1])
     ep_tiles = eps_p.reshape(-1, tile_b, eps.shape[1])
+    lv_tiles = (jnp.arange(q_p.shape[0]) < b).reshape(-1, tile_b)
 
-    def tiles_body(xx, gg, vv, qq, qt, et):
+    def tiles_body(xx, gg, vv, qq, qt, et, lt):
         return jax.lax.map(
-            lambda t: _search_impl(xx, gg, t[0], t[1], cfg, valid=vv, qx=qq),
-            (qt, et),
+            lambda t: _search_impl(xx, gg, t[0], t[1], cfg, valid=vv, qx=qq,
+                                   lane_valid=t[2]),
+            (qt, et, lt),
         )
 
     if qaxes:
@@ -550,8 +651,8 @@ def search_tiled(
         if has_qx:
             operands.append(qx)
             specs.append(jax.tree.map(lambda _: P(), qx))
-        operands += [q_tiles, ep_tiles]
-        specs += [qspec, qspec]
+        operands += [q_tiles, ep_tiles, lv_tiles]
+        specs += [qspec, qspec, SH.pspec(mesh, "queries", None)]
 
         def dispatch(xx, gg, *rest):
             i = 0
@@ -559,17 +660,29 @@ def search_tiled(
             i += has_valid
             qq = rest[i] if has_qx else None
             i += has_qx
-            return tiles_body(xx, gg, vv, qq, rest[i], rest[i + 1])
+            return tiles_body(xx, gg, vv, qq, rest[i], rest[i + 1],
+                              rest[i + 2])
 
-        ids, dists = shard_map(
+        ids, dists, lane_work, tile_iters = shard_map(
             dispatch, mesh=mesh,
             in_specs=tuple(specs),
-            out_specs=(qspec, qspec),
+            out_specs=(qspec, qspec, SH.pspec(mesh, "queries", None),
+                       SH.pspec(mesh, "queries")),
             check_rep=False,
         )(*operands)
     else:
-        ids, dists = tiles_body(x, g, valid, qx, q_tiles, ep_tiles)
-    return ids.reshape(-1, cfg.topk)[:b], dists.reshape(-1, cfg.topk)[:b]
+        ids, dists, lane_work, tile_iters = tiles_body(
+            x, g, valid, qx, q_tiles, ep_tiles, lv_tiles)
+    out = (ids.reshape(-1, cfg.topk)[:b], dists.reshape(-1, cfg.topk)[:b])
+    if not with_stats:
+        return out
+    stats = {
+        "work": jnp.sum(lane_work.reshape(-1)[:b]),
+        "launched": jnp.sum(tile_iters) * tile_b,
+        "tiles": q_tiles.shape[0],
+        "tile_lanes": tile_b,
+    }
+    return out + (stats,)
 
 
 def default_entry_point(
@@ -602,6 +715,13 @@ def default_entry_points(
     ``valid``: optional (n,) bool mask — every returned seed is drawn from
     live rows only (tombstoned / capacity-padded rows are never handed out).
     ``None`` keeps the historical sampling bit-for-bit."""
+    if n_entries > x.shape[0]:
+        # without this the unmasked path dies inside jax.random.choice with
+        # an opaque "cannot take a larger sample than population" internal
+        # error — there are only n distinct vertices to seed from
+        raise ValueError(
+            f"n_entries={n_entries} exceeds the corpus size n={x.shape[0]}: "
+            "entry points are distinct vertices, so at most n can be drawn")
     center = default_entry_point(x, metric, valid=valid)
     if n_entries <= 1:
         return center[None]

@@ -12,12 +12,14 @@ The only cross-shard traffic is candidate routing: a shard's rows emit
 candidate edges whose *destination* rows live on other shards (RNN-Descent
 replacement edges (w -> v) land in row w; reverse edges land in the reversed
 source's row). PR 2's scatter-bucketed merge makes that exchange a pure
-min-reduction: each shard scatters its candidates into a full-height partial
-bucket table ((n_pad, B) per field), and a reduce-scatter —
-``all_to_all`` + the staged lexicographic fold of
-:func:`repro.core.graph.combine_bucket_tables`, i.e. ``psum_scatter`` with
-min-by-(priority, dist_key, id) in place of sum — hands every shard the
-combined table block for exactly its own rows.
+min-reduction, and :func:`exchange_scatter` runs it *destination-bucketed*:
+on ring hop j every shard scatters its candidates into only the
+(n_pad/D, B) table block owned by peer (me + j) % D, ships exactly that
+block with a ``ppermute``, and folds arrivals pairwise with the staged
+lexicographic min of :func:`repro.core.graph.combine_bucket_tables_pair`
+— a reduce-scatter with min-by-(priority, dist_key, id) in place of sum
+that never materializes a full-height (n_pad, B) table. Each shard ends
+holding the combined block for exactly its own rows.
 
 Exactness
 ---------
@@ -27,16 +29,27 @@ list combines associatively to the global minimum, the sharded build is
 **bitwise identical** to the single-device build: same int32 neighbor ids,
 same uint32 dist_keys, same flags, for every builder and metric — asserted
 in tests/test_sharded_parity.py on an 8-virtual-device CPU mesh
-(``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``). Two facts carry
+the destination-bucketed form: a blockwise scatter with shifted rows and a
+block-local height is exactly the block restriction of the full-height
+scatter (out-of-block rows fail the range guard in
+``bucket_scatter_tables``), and the staged fold is associative and
+commutative, so accumulating one peer block per ring hop is bitwise equal
+to the stacked all-partials fold.
 
 Memory math (per device, n rows, D shards, bucket width B, capacity M):
   * adjacency rows:      3 fields * (n/D) * M           (sharded — the win)
-  * corpus x:            n * d * 4 bytes                (replicated)
-  * partial bucket tabs: (9..13) * n_pad * B bytes      (transient, one merge)
-The partial tables are full-height (a shard's candidates can target any
-row); the all_to_all immediately scatters them back down to (n/D) * B. A
-destination-bucketed scatter that never materializes the full height is the
-follow-up this unlocks (see ROADMAP).
+  * corpus x:            n * d * 4 bytes                (replicated; serving
+                                                         shards it — see
+                                                         core/search_sharded)
+  * partial bucket tabs: (9..13) * (n_pad/D) * B bytes  (transient: the live
+                                                         accumulator + the
+                                                         in-flight peer block,
+                                                         ~2-3 blocks total)
+No full-height transient remains: wire bytes are unchanged from the old
+full-height ``all_to_all`` ((D-1)/D of the table crosses the wire either
+way — the budget ``analysis/collectives.py`` enforces), but peak scatter
+memory dropped from (9..13) * n_pad * B to O(n_pad/D) * B per merge.
 
 ``n`` not divisible by the shard count is handled by padding rows with empty
 adjacency: padded rows emit no candidates (all ids are -1) and real
@@ -135,15 +148,59 @@ def exchange_bucket_tables(axes, n_dev, tabs):
     return G.combine_bucket_tables(rs(p), rs(k), rs(i), rs(f))
 
 
+def exchange_scatter(axes, n_dev, n_pad, scatter_block):
+    """Destination-bucketed reduce-scatter-min of bucket tables.
+
+    ``scatter_block(lo, n_blk)`` must scatter this shard's candidates into
+    the (n_blk, B) partial tables covering destination rows
+    [lo, lo + n_blk) — the block restriction of the full-height scatter
+    (out-of-block rows fail the range guard in
+    :func:`repro.core.graph.bucket_scatter_tables`; ``lo`` may be traced).
+
+    Ring exchange: on hop j every shard computes the block destined for
+    peer (me + j) % n_dev, ships exactly that block with a ``ppermute``,
+    and folds the arriving peer block into its accumulator with the
+    pairwise staged lexicographic min. Hop 0 is the shard's own block (no
+    communication). Total wire bytes equal the full-height ``all_to_all``
+    ((n_dev - 1)/n_dev of the table crosses the wire either way), but the
+    per-shard transient drops from (n_pad, B) to ~2-3 blocks of
+    (n_pad/n_dev, B): the accumulator plus the in-flight block.
+
+    Returns the combined (n_pad/n_dev, B) tables for this shard's own
+    rows, bitwise equal to a full-height scatter of the union candidate
+    list followed by a reduce-scatter (blockwise scatter = block
+    restriction; pairwise fold = stacked fold)."""
+    if not axes or n_dev == 1:
+        return scatter_block(0, n_pad)
+    if len(axes) > 1:
+        # rows sharded over multiple physical axes: ring addressing wants a
+        # single axis — keep the full-height all_to_all path on those meshes
+        return exchange_bucket_tables(axes, n_dev, scatter_block(0, n_pad))
+    ax = axes[0]
+    n_blk = n_pad // n_dev
+    me = jax.lax.axis_index(ax)
+    acc = scatter_block(me * n_blk, n_blk)
+    for j in range(1, n_dev):
+        blk = scatter_block((me + j) % n_dev * n_blk, n_blk)
+        perm = [(s, (s + j) % n_dev) for s in range(n_dev)]
+        blk = jax.tree.map(lambda t: jax.lax.ppermute(t, ax, perm), blk)
+        acc = G.combine_bucket_tables_pair(acc, blk)
+    return acc
+
+
 def _merge_candidates_shard(g_local, cand_src, cand_dst, cand_dist,
                             n_pad, cap, b, axes, n_dev) -> G.Graph:
     """Shard-local half of merge_candidate_edges(merge="bucketed"): scatter
-    this shard's candidates into full-height partial tables, exchange, merge
-    the combined block into the local rows."""
-    tabs = G.bucket_scatter_tables(
-        cand_src, cand_dst, cand_dist,
-        jnp.full(cand_dst.reshape(-1).shape, G.NEW), n_pad, b)
-    _, kt, it, ft = exchange_bucket_tables(axes, n_dev, tabs)
+    this shard's candidates one destination block at a time, ring-exchange
+    the blocks, merge the combined block into the local rows."""
+    flags = jnp.full(cand_dst.reshape(-1).shape, G.NEW)
+
+    def scatter_block(lo, n_blk):
+        return G.bucket_scatter_tables(
+            cand_src - lo, cand_dst, cand_dist, flags, n_blk, b,
+            row_ids=lo + jnp.arange(n_blk, dtype=jnp.int32))
+
+    _, kt, it, ft = exchange_scatter(axes, n_dev, n_pad, scatter_block)
     b_ids, b_dist, b_flag = G.decode_bucket_tables(kt, it, ft)
     return G.merge_rows_with_buckets(
         g_local, b_ids, b_dist, b_flag, cap, g_local.neighbors.shape[1])
@@ -255,9 +312,14 @@ def add_reverse_edges(g: G.Graph, r: int, mesh: Mesh,
         flag_cat = jnp.concatenate([flag, jnp.full_like(flag, G.NEW)])
         prio_cat = jnp.concatenate(
             [jnp.zeros_like(src), jnp.ones_like(src)])
-        tabs = G.bucket_scatter_tables(rows_cat, ids_cat, dist_cat, flag_cat,
-                                       n_pad, b, prio=prio_cat)
-        _, kt, it, ft = exchange_bucket_tables(axes, d, tabs)
+
+        def scat_in(lo, n_blk):
+            return G.bucket_scatter_tables(
+                rows_cat - lo, ids_cat, dist_cat, flag_cat, n_blk, b,
+                prio=prio_cat,
+                row_ids=lo + jnp.arange(n_blk, dtype=jnp.int32))
+
+        _, kt, it, ft = exchange_scatter(axes, d, n_pad, scat_in)
         in_ids, in_dist, in_flag = G.decode_bucket_tables(kt, it, ft)
         in_ids, in_dist, in_flag = G.row_topk(in_ids, in_dist, in_flag, r, wa)
         # surviving edges (u -> v), regrouped by source for the out-degree cap
@@ -265,9 +327,15 @@ def add_reverse_edges(g: G.Graph, r: int, mesh: Mesh,
         e_dst = jnp.where(
             e_src >= 0,
             jnp.broadcast_to(rid[:, None], (n_loc, wa)).reshape(-1), -1)
-        tabs2 = G.bucket_scatter_tables(e_src, e_dst, in_dist.reshape(-1),
-                                        in_flag.reshape(-1), n_pad, b)
-        _, kt2, it2, ft2 = exchange_bucket_tables(axes, d, tabs2)
+        e_dist = in_dist.reshape(-1)
+        e_flag = in_flag.reshape(-1)
+
+        def scat_out(lo, n_blk):
+            return G.bucket_scatter_tables(
+                e_src - lo, e_dst, e_dist, e_flag, n_blk, b,
+                row_ids=lo + jnp.arange(n_blk, dtype=jnp.int32))
+
+        _, kt2, it2, ft2 = exchange_scatter(axes, d, n_pad, scat_out)
         o_ids, o_dist, o_flag = G.decode_bucket_tables(kt2, it2, ft2)
         return G.Graph(*G.row_topk(o_ids, o_dist, o_flag, min(r, m), m))
 

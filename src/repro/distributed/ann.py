@@ -4,9 +4,10 @@ persistence.
 The thin operational layer over core/: one object owns the corpus, the built
 graph, and the mesh, and routes every operation through the sharded paths
 when a mesh is present (build -> core/shard.py row-sharded construction;
-search -> core/search.py query-tile sharding) or the plain single-device
-paths when it is not — with *identical* results either way (the core
-contracts asserted in tests/test_sharded_parity.py).
+search -> core/search.py query-tile sharding, or core/search_sharded.py's
+corpus-sharded beam when ``serve_shard="corpus"``) or the plain
+single-device paths when it is not — with *identical* results either way
+(the core contracts asserted in tests/test_sharded_parity.py).
 
 Persistence goes through checkpoint/ (atomic-commit npz shards): the graph is
 saved as host arrays and restored onto whatever mesh the new job runs —
@@ -71,14 +72,38 @@ def graph_sharding(mesh: Mesh, n: int) -> NamedSharding:
 
 
 def place_graph(g: G.Graph, mesh: Mesh | None) -> G.Graph:
-    """Commit a graph to the mesh, *replicated*: sharded serving declares the
-    graph replicated per device (search_tiled's in_specs), so replicating
-    once at placement time beats row-sharding and paying an all-gather
-    inside every compiled search call."""
+    """Commit a graph to the mesh, *replicated*: query-sharded serving
+    declares the graph replicated per device (search_tiled's in_specs), so
+    replicating once at placement time beats row-sharding and paying an
+    all-gather inside every compiled search call. Corpus-sharded serving
+    wants :func:`place_rows` instead — each device then holds ~n/D rows."""
     if mesh is None:
         return g
     s = NamedSharding(mesh, P())
     return G.Graph(*(jax.device_put(jnp.asarray(np.asarray(a)), s) for a in g))
+
+
+def place_rows(tree, mesh: Mesh | None, n: int | None = None):
+    """Row-shard every array in a pytree over the mesh's row axis (leading
+    dim) when its row count divides the shard count; replicate otherwise.
+    With ``n`` given, only arrays whose leading dim is exactly ``n`` are
+    row-sharded (per-corpus-row data) and everything else — pq codebooks,
+    int8 scale/zero — is replicated.
+
+    The corpus-sharded serving placement: ``search_tiled(shard="corpus")``
+    declares the corpus, adjacency and codes row-sharded, so committing rows
+    to their owner up front keeps each device's resident footprint at ~n/D
+    rows and avoids a reshard at every dispatch. Arrays whose leading dim
+    does not divide (or that are per-device metadata like pq codebooks)
+    fall back to replication — the serving path reshards them internally."""
+    if mesh is None or tree is None:
+        return tree
+    def put(a):
+        a = jnp.asarray(np.asarray(a))
+        if n is not None and (a.ndim == 0 or a.shape[0] != n):
+            return jax.device_put(a, NamedSharding(mesh, P()))
+        return jax.device_put(a, graph_sharding(mesh, a.shape[0]))
+    return jax.tree.map(put, tree)
 
 
 def place_replicated(tree, mesh: Mesh | None):
@@ -107,15 +132,23 @@ class ShardedANN:
     method: str = "rnn-descent"
     build_cfg: Any = None
     qx: QuantizedCorpus | None = None
+    serve_shard: str = "queries"
 
     @classmethod
     def build(cls, x, method: str = "rnn-descent", cfg=None,
               key: jax.Array | None = None, mesh: Mesh | None = None,
-              ) -> "ShardedANN":
+              serve_shard: str = "queries") -> "ShardedANN":
         """Construct the index — row-sharded over ``mesh`` when given. A
         coded ``cfg.quant`` builds the graph in the quantized geometry and
         keeps the codes for serving (search configs with the same mode hit
-        the fused decode+score path)."""
+        the fused decode+score path).
+
+        ``serve_shard`` picks the serving placement: ``"queries"`` replicates
+        corpus + graph on every device and shards query tiles (fastest when
+        the index fits per-device memory); ``"corpus"`` row-shards corpus,
+        adjacency and codes so each device holds ~n/D rows, and serving
+        routes frontier gathers through collectives — same bits, ~1/D the
+        resident footprint."""
         cfg = cfg if cfg is not None else _default_cfg(method)
         key = key if key is not None else jax.random.PRNGKey(0)
         g = _build_fn(method)(x, cfg, key, mesh=mesh)
@@ -124,14 +157,55 @@ class ShardedANN:
         if quant is not None and quant.is_coded:
             # deterministic re-encode (same train rows, same pq seed) of the
             # codes the builder's prep_corpus derived the geometry from
-            qx = place_replicated(
-                encode_corpus(jnp.asarray(x, jnp.float32), quant), mesh)
-        return cls(x=x, graph=g, mesh=mesh, method=method, build_cfg=cfg,
-                   qx=qx)
+            qx = encode_corpus(jnp.asarray(x, jnp.float32), quant)
+        ann = cls(x=x, graph=g, mesh=mesh, method=method, build_cfg=cfg,
+                  qx=qx, serve_shard=serve_shard)
+        return ann._placed()
+
+    def _placed(self) -> "ShardedANN":
+        """Re-place corpus/graph/codes for the selected serving mode."""
+        if self.mesh is None:
+            return self
+        if self.serve_shard not in ("queries", "corpus"):
+            raise ValueError(
+                f"serve_shard={self.serve_shard!r}: expected 'queries' or "
+                "'corpus'")
+        n = int(jnp.shape(self.x)[0])
+        if self.serve_shard == "corpus":
+            return dataclasses.replace(
+                self,
+                x=place_rows(jnp.asarray(self.x), self.mesh, n),
+                graph=G.Graph(*place_rows(tuple(self.graph), self.mesh, n)),
+                qx=place_rows(self.qx, self.mesh, n))
+        return dataclasses.replace(
+            self,
+            x=place_replicated(jnp.asarray(self.x), self.mesh),
+            graph=place_graph(self.graph, self.mesh),
+            qx=place_replicated(self.qx, self.mesh))
+
+    def device_resident_bytes(self) -> int:
+        """Max bytes of corpus + graph (+ codes) resident on any one device.
+
+        Measured from the actual array shards, so it reflects the real
+        placement: ~full-index bytes under ``serve_shard="queries"``
+        (everything replicated), ~1/D under ``"corpus"`` row sharding."""
+        leaves = [self.x, *tuple(self.graph)]
+        if self.qx is not None:
+            leaves += [a for a in jax.tree.leaves(self.qx)]
+        total = 0
+        for a in leaves:
+            shards = getattr(a, "addressable_shards", None)
+            if shards:
+                total += max(s.data.nbytes for s in shards)
+            else:
+                total += np.asarray(a).nbytes
+        return total
 
     def search(self, queries, cfg: S.SearchConfig | None = None,
                entry_points=None, tile_b: int = 256):
-        """Serve through the tiled driver; query tiles shard over the mesh."""
+        """Serve through the tiled driver — query tiles shard over the mesh,
+        and ``serve_shard="corpus"`` routes through the corpus-sharded beam
+        (core/search_sharded.py) so the corpus never leaves its owner."""
         cfg = cfg if cfg is not None else S.SearchConfig()
         qx = None
         if cfg.quant.is_coded:
@@ -148,7 +222,8 @@ class ShardedANN:
         if entry_points is None:
             entry_points = S.default_entry_point(self.x, cfg.metric)
         return S.search_tiled(self.x, self.graph, queries, entry_points,
-                              cfg, tile_b=tile_b, mesh=self.mesh, qx=qx)
+                              cfg, tile_b=tile_b, mesh=self.mesh, qx=qx,
+                              shard=self.serve_shard)
 
     # ------------------------------------------------------------ persistence
     def save(self, ckpt_dir: str, step: int = 0) -> None:
@@ -164,7 +239,7 @@ class ShardedANN:
     @classmethod
     def restore(cls, ckpt_dir: str, x, mesh: Mesh | None = None,
                 step: int | None = None, method: str = "rnn-descent",
-                ) -> "ShardedANN":
+                serve_shard: str = "queries") -> "ShardedANN":
         """Elastic restore: load the committed graph (and codes, if the
         checkpoint holds any) and place them on ``mesh`` (any shape — need
         not match the mesh it was saved from)."""
@@ -190,5 +265,6 @@ class ShardedANN:
             g = checkpoint.restore(ckpt_dir, step, like)
             g = G.Graph(*(jnp.asarray(a) for a in g))
             qx = None
-        return cls(x=x, graph=place_graph(g, mesh), mesh=mesh, method=method,
-                   qx=place_replicated(qx, mesh))
+        ann = cls(x=x, graph=g, mesh=mesh, method=method, qx=qx,
+                  serve_shard=serve_shard)
+        return ann._placed()

@@ -31,14 +31,15 @@ Insert (one batch of B points)
    fell outside the frontier are dropped — the locality that keeps insert
    cost O(F), verified against corpus size in BENCH_streaming.json.
 
-Sharded inserts (``mesh=``) ride the PR-4 exchange unchanged: *frontier*
-rows partition across the mesh's "rows" axis, each shard prunes its slice and
-scatters into full-height (F, B) partial tables, and
-``shard.exchange_bucket_tables`` (all_to_all + staged lexicographic-min fold)
-hands each shard the combined block for its rows. Per-row work is identical
-and the fold is exact, so sharded updates are **bitwise equal** to
-single-device (tests/test_streaming.py) — the same argument as the sharded
-batch build.
+Sharded inserts (``mesh=``) ride the same exchange as the batch build:
+*frontier* rows partition across the mesh's "rows" axis, each shard prunes
+its slice and scatters one destination block at a time into (F/D, B)
+partial tables, and ``shard.exchange_scatter`` (ring ppermute + pairwise
+staged lexicographic-min fold) hands each shard the combined block for its
+rows without ever materializing a full-height (F, B) table. Per-row work
+is identical and the fold is exact, so sharded updates are **bitwise
+equal** to single-device (tests/test_streaming.py) — the same argument as
+the sharded batch build.
 
 Delete (one batch of ids)
 -------------------------
@@ -194,13 +195,14 @@ def _frontier_sweep_block(x, g, f_slice, f_full, ex_rows, ex_ids, ex_d,
     rows_cat = jnp.concatenate([_local_rows(f_full, rw, f_pad), ex_rows])
     ids_cat = jnp.concatenate([rv, ex_ids])
     d_cat = jnp.concatenate([red_d.reshape(-1), ex_d])
-    tabs = G.bucket_scatter_tables(
-        rows_cat, ids_cat, d_cat, jnp.full(ids_cat.shape, NEW), f_pad,
-        n_buckets, row_ids=f_full)
-    if axes:
-        _, kt, it, ft = shard.exchange_bucket_tables(axes, n_dev, tabs)
-    else:
-        _, kt, it, ft = tabs
+    flags_cat = jnp.full(ids_cat.shape, NEW)
+
+    def scatter_block(lo, f_blk):
+        return G.bucket_scatter_tables(
+            rows_cat - lo, ids_cat, d_cat, flags_cat, f_blk, n_buckets,
+            row_ids=jax.lax.dynamic_slice(f_full, (lo,), (f_blk,)))
+
+    _, kt, it, ft = shard.exchange_scatter(axes, n_dev, f_pad, scatter_block)
     b_ids, b_d, b_f = G.decode_bucket_tables(kt, it, ft)
     return G.merge_rows_with_buckets(pruned, b_ids, b_d, b_f, m, m)
 

@@ -7,11 +7,12 @@ config. No tolerance, no canonicalization.
 
 These tests run on whatever devices exist: under plain tier-1 (one CPU
 device) they exercise the complete sharded code path — row padding,
-full-height partial tables, the all_to_all reduce-scatter-min exchange — on
-a 1-device mesh; the CI mesh job re-runs them with
-``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the exchange
-really crosses 8 shards. The corpus size (700) is deliberately not divisible
-by 2, 4, or 8, so multi-device runs always exercise the inert row padding.
+destination-bucketed (n_pad/D, B) scatter blocks, the ring ppermute
+exchange, the corpus-sharded beam — on a 1-device mesh; the CI mesh job
+re-runs them with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so
+the exchange really crosses 8 shards. The corpus size (700) is deliberately
+not divisible by 2, 4, or 8, so multi-device runs always exercise the inert
+row padding.
 """
 import jax
 import jax.numpy as jnp
@@ -171,3 +172,112 @@ def test_search_sharded_tiny_batch(corpus, mesh, rnn_graph):
     ids_1, _ = S.search_tiled(x, rnn_graph, qq, ep, cfg, tile_b=64)
     ids_m, _ = S.search_tiled(x, rnn_graph, qq, ep, cfg, tile_b=64, mesh=mesh)
     assert np.array_equal(np.asarray(ids_1), np.asarray(ids_m))
+
+
+def test_search_sharded_no_padding_blowup(corpus, mesh, rnn_graph):
+    """The query-tile shrink: b=101 on D devices must not launch more
+    (tiles x lanes x iters) than the single-device run, while the per-lane
+    beam work (iterations of live lanes) stays bitwise identical."""
+    x, q = corpus
+    cfg = S.SearchConfig(l=16, k=12, max_iters=48, topk=5)
+    ep = S.default_entry_point(x)
+    *_, st_1 = S.search_tiled(x, rnn_graph, q, ep, cfg, tile_b=256,
+                              with_stats=True)
+    *_, st_m = S.search_tiled(x, rnn_graph, q, ep, cfg, tile_b=256,
+                              mesh=mesh, with_stats=True)
+    assert int(st_1["work"]) == int(st_m["work"])
+    assert int(st_m["launched"]) <= int(st_1["launched"])
+    # lanes bounded by one ceil-division tile per device
+    d = jax.device_count()
+    assert st_m["tiles"] * st_m["tile_lanes"] <= d * max(2, -(-101 // d))
+
+
+# -------------------------------------------------- corpus-sharded serving
+@pytest.mark.parametrize("visited", ("hashed", "dense"))
+def test_search_corpus_sharded_parity(corpus, mesh, rnn_graph, visited):
+    """shard="corpus" — x and adjacency rows partitioned over the mesh,
+    frontier gathers routed through owner-contribute collectives — must be
+    bitwise equal to the single-device beam: same ids, same uint32 dist
+    bits, same per-lane work. The batch (101) divides neither the tile nor
+    the device count."""
+    x, q = corpus
+    cfg = S.SearchConfig(l=16, k=12, max_iters=48, topk=5, visited=visited)
+    ep = S.default_entry_point(x)
+    ids_1, d_1, st_1 = S.search_tiled(x, rnn_graph, q, ep, cfg, tile_b=16,
+                                      with_stats=True)
+    ids_m, d_m, st_m = S.search_tiled(x, rnn_graph, q, ep, cfg, tile_b=16,
+                                      mesh=mesh, shard="corpus",
+                                      with_stats=True)
+    assert np.array_equal(np.asarray(ids_1), np.asarray(ids_m))
+    assert np.array_equal(np.asarray(G.dist_key(d_1)),
+                          np.asarray(G.dist_key(d_m)))
+    assert int(st_1["work"]) == int(st_m["work"])
+    # no lane blowup: the super-tiles launch no more lanes than the
+    # single-device tiling of the same batch
+    assert st_m["tiles"] * st_m["tile_lanes"] <= st_1["tiles"] * st_1["tile_lanes"]
+
+
+@pytest.mark.parametrize("mode", ("int8", "pq"))
+def test_search_corpus_sharded_quant_parity(corpus, mesh, rnn_graph, mode):
+    """Quantized scoring against row-sharded codes: int8 rows and pq codes
+    live with their owner; scale/zero/codebooks replicate."""
+    from repro.quant import Quantization, encode_corpus
+    x, q = corpus
+    quant = (Quantization(mode="int8") if mode == "int8"
+             else Quantization(mode="pq", m=6))
+    cfg = S.SearchConfig(l=16, k=12, max_iters=48, topk=5, quant=quant)
+    qx = encode_corpus(x, quant)
+    ep = S.default_entry_point(x)
+    ids_1, d_1 = S.search_tiled(x, rnn_graph, q, ep, cfg, tile_b=16, qx=qx)
+    ids_m, d_m = S.search_tiled(x, rnn_graph, q, ep, cfg, tile_b=16, qx=qx,
+                                mesh=mesh, shard="corpus")
+    assert np.array_equal(np.asarray(ids_1), np.asarray(ids_m))
+    assert np.array_equal(np.asarray(G.dist_key(d_1)),
+                          np.asarray(G.dist_key(d_m)))
+
+
+def test_search_corpus_sharded_tiny_batch(corpus, mesh, rnn_graph):
+    """b=3 on up to 8 devices: lane blocks floor at 2 so per-block scoring
+    keeps batch >= 2 (XLA:CPU's batch-1 einsum rounds differently)."""
+    x, q = corpus
+    cfg = S.SearchConfig(l=8, k=8, max_iters=24, topk=2)
+    ep = S.default_entry_point(x)
+    ids_1, d_1 = S.search_tiled(x, rnn_graph, q[:3], ep, cfg, tile_b=64)
+    ids_m, d_m = S.search_tiled(x, rnn_graph, q[:3], ep, cfg, tile_b=64,
+                                mesh=mesh, shard="corpus")
+    assert np.array_equal(np.asarray(ids_1), np.asarray(ids_m))
+    assert np.array_equal(np.asarray(G.dist_key(d_1)),
+                          np.asarray(G.dist_key(d_m)))
+
+
+def test_search_corpus_sharded_multi_entry_and_valid(corpus, mesh, rnn_graph):
+    """Multi-entry seeding + tombstone mask through the corpus-sharded path."""
+    x, q = corpus
+    cfg = S.SearchConfig(l=16, k=12, max_iters=48, topk=3)
+    eps = jnp.broadcast_to(
+        S.default_entry_points(x, n_entries=3)[None, :], (q.shape[0], 3))
+    valid = jnp.arange(N) % 7 != 0
+    ids_1, d_1 = S.search_tiled(x, rnn_graph, q, eps, cfg, tile_b=32,
+                                valid=valid)
+    ids_m, d_m = S.search_tiled(x, rnn_graph, q, eps, cfg, tile_b=32,
+                                valid=valid, mesh=mesh, shard="corpus")
+    assert np.array_equal(np.asarray(ids_1), np.asarray(ids_m))
+    assert np.array_equal(np.asarray(G.dist_key(d_1)),
+                          np.asarray(G.dist_key(d_m)))
+
+
+def test_search_tiled_rejects_unknown_shard(corpus, mesh, rnn_graph):
+    x, q = corpus
+    cfg = S.SearchConfig(l=8, k=8, max_iters=8, topk=2)
+    ep = S.default_entry_point(x)
+    with pytest.raises(ValueError, match="unknown shard mode"):
+        S.search_tiled(x, rnn_graph, q[:4], ep, cfg, tile_b=4, mesh=mesh,
+                       shard="rows")
+    with pytest.raises(ValueError, match="requires mesh"):
+        S.search_tiled(x, rnn_graph, q[:4], ep, cfg, tile_b=4, shard="corpus")
+
+
+def test_default_entry_points_rejects_oversized(corpus):
+    x, _ = corpus
+    with pytest.raises(ValueError, match="exceeds the corpus size"):
+        S.default_entry_points(x, n_entries=N + 1)

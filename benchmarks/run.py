@@ -11,18 +11,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: construction,search,quant,streaming,"
-                         "degrees,t1t2,k_sweep,scale,kernels")
+                         "serving,degrees,t1t2,k_sweep,scale,kernels")
     args = ap.parse_args()
 
     from benchmarks import (bench_construction, bench_degrees, bench_k_sweep,
                             bench_kernels, bench_quant, bench_scale,
-                            bench_search, bench_streaming, bench_t1t2)
+                            bench_search, bench_serving, bench_streaming,
+                            bench_t1t2)
 
     suites = {
         "construction": bench_construction.run,   # paper Fig 3
         "search": bench_search.run,               # paper Fig 2
         "quant": bench_quant.run,                 # int8/pq memory-recall-qps
         "streaming": bench_streaming.run,         # dynamic insert/delete churn
+        "serving": bench_serving.run,             # admission-batched frontend
         "degrees": bench_degrees.run,             # paper Fig 4/5 + Table A
         "t1t2": bench_t1t2.run,                   # paper Fig 6/7
         "k_sweep": bench_k_sweep.run,             # paper Fig 8

@@ -125,6 +125,33 @@ tests/test_streaming.py), serving snapshots are epoch-consistent during
 updates, and the whole store persists through checkpoint/ onto any mesh
 shape. The churn trajectory (insert/delete throughput, recall vs rebuild)
 lives in repo-root BENCH_streaming.json.
+
+Serving front end
+-----------------
+``repro.serving`` wraps the batch API in a serving loop (ROADMAP
+"Serving" has the policy math). Arriving queries coalesce into
+fixed-shape ``search_tiled`` tiles — dispatched when the tile fills or
+the oldest request has spent half its latency budget — while concurrent
+inserts/deletes batch to fixed sizes behind ``StreamingANN``'s epoch
+swap; a dispatched tile keeps serving the snapshot it was built against.
+Occupancy never changes a program shape (vacant lanes are zero-staged
+and masked via ``lane_valid``), so a warmed server compiles nothing at
+steady state:
+
+    fe = ServingFrontend(ann, ServingConfig(
+        admission=AdmissionConfig(tile_lanes=64, deadline_s=0.2),
+        writer=WriterConfig(insert_batch=32, delete_batch=32),
+        search=scfg))
+    rid = fe.submit(query)               # any thread
+    tk = fe.submit_insert(new_rows)      # batched behind the epoch swap
+    fe.pump()                            # the serving loop's turn
+    ids, dists = fe.result(rid)          # tk.ids -> assigned row ids
+
+``fe.telemetry.summary()`` reports p50/p95/p99 latency, achieved QPS,
+batch occupancy, queue depth, and per-tile epoch staleness; the
+open-loop load generator (``run_session``/``LoadSpec``) drives the
+QPS-under-churn trajectory in repo-root BENCH_serving.json. The demo
+below replays a short churn session end to end.
 """
 import dataclasses
 import time
@@ -232,6 +259,38 @@ ids_s, _ = ann.search(q, dataclasses.replace(scfg, topk=10))
 print(f"streaming churn           +{x.shape[0]-n0} pts in {ins_sec:5.2f}s  "
       f"-{n0 // 10} tombstoned  recall@10 "
       f"{E.recall_topk(ids_s, gt_si, valid=live):.4f}  epoch {ann.epoch}")
+
+# serving front end (see "Serving front end" above): replay a short open-loop
+# session against the churned index — queries coalesce into fixed-shape
+# tiles while two write bursts commit mid-stream behind the epoch swap
+from repro.serving import (AdmissionConfig, LoadSpec, ServingConfig,
+                           ServingFrontend, WriterConfig, run_session)
+
+srv_cfg = ServingConfig(
+    admission=AdmissionConfig(tile_lanes=32, deadline_s=1.5),
+    writer=WriterConfig(insert_batch=32, delete_batch=32),
+    search=dataclasses.replace(scfg, topk=10))
+# a real server warms its program shapes at startup — one full tile plus one
+# insert/delete commit round; after this the session compiles nothing (the
+# zero-steady-state-compile contract, guarded in CI)
+fe = ServingFrontend(ann, srv_cfg)
+for row in np.asarray(q[:32], np.float32):
+    fe.submit(row)
+wtk = fe.submit_insert(np.asarray(x[:32]))
+fe.drain()
+ann.delete(wtk.ids)                                    # retire the warm rows
+fe = ServingFrontend(ann, srv_cfg)                     # fresh SLO telemetry
+writes = [(64, "insert", np.asarray(x[:32])),          # re-add 32 old rows
+          (128, "delete", np.arange(600, 632))]        # retire 32 live ones
+summ = run_session(fe, np.asarray(q, np.float32),
+                   LoadSpec(n_requests=256, qps=32.0, deadline_s=1.5),
+                   writes=writes)
+lat = summ["latency_ms"]
+print(f"serving session           {summ['completed']} reqs  "
+      f"p50 {lat['p50']:6.1f}ms  p99 {lat['p99']:6.1f}ms  "
+      f"qps {summ['achieved_qps']:7.1f}  occupancy "
+      f"{summ['occupancy_mean']:.2f}  staleness_max {summ['staleness_max']}  "
+      f"epoch {ann.epoch}")
 
 # compressed corpora (see "Compressed corpora" above): serve the rnn-descent
 # graph from int8 and PQ codes — fused decode+score kernels, exact-f32

@@ -84,7 +84,28 @@ print(f"  streaming churn (+1000/-500): recall@10="
       f"epoch={ann.epoch}  live={ann.live}/{ann.capacity} rows")
 assert not np.any(np.isin(np.asarray(ids_s), np.arange(500)))  # never surface
 
-# 7. compressed corpus: store int8 or PQ codes instead of f32 rows and let
+# 7. serve it: the admission queue coalesces arriving queries into
+# fixed-shape search tiles (dispatch when full, or when the oldest request
+# has spent half its latency budget), concurrent writes batch behind the
+# epoch swap, and telemetry reports the SLO view. A warmed server compiles
+# zero XLA programs at steady state — see ROADMAP "Serving".
+from repro.serving import AdmissionConfig, ServingConfig, ServingFrontend
+
+fe = ServingFrontend(ann, ServingConfig(
+    admission=AdmissionConfig(tile_lanes=32, deadline_s=0.2),
+    search=S.SearchConfig(l=32, k=32, max_iters=96, topk=10)))
+rids = [fe.submit(row) for row in np.asarray(queries[:48], np.float32)]
+tk = fe.submit_insert(np.asarray(x[:32]))       # rides the next full batch
+fe.drain()                                      # demo: flush instead of pump
+first_ids, _ = fe.result(rids[0])
+summ = fe.telemetry.summary()
+print(f"  serving: {summ['completed']} requests in {summ['tiles']} tiles  "
+      f"p50={summ['latency_ms']['p50']:.1f}ms  "
+      f"occupancy={summ['occupancy_mean']:.2f}  "
+      f"insert ticket -> rows {tk.ids[:3]}...")
+assert np.array_equal(first_ids, np.asarray(ids_s)[0])   # same store, same bits
+
+# 8. compressed corpus: store int8 or PQ codes instead of f32 rows and let
 # the fused kernels decode in-register next to the distance math. One
 # Quantization object selects the representation everywhere (builder and
 # search configs); coded searches finish with an exact-f32 rerank tail over

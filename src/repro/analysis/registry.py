@@ -191,6 +191,31 @@ def _trace_search_tiled_corpus():
     )(_x(), _graph(), _queries(), valid)
 
 
+def _trace_search_tiled_serving():
+    """The serving dispatch program: fixed-shape tile with per-lane
+    validity (vacant admission lanes masked, see repro.serving.frontend)."""
+    from repro.core import search as S
+    cfg = _search_cfg()
+    lv = jax.ShapeDtypeStruct((B,), jnp.bool_)
+    return jax.make_jaxpr(
+        lambda x, g, q, m: S.search_tiled(x, g, q, jnp.int32(0), cfg,
+                                          tile_b=2, lane_valid=m)
+    )(_x(), _graph(), _queries(), lv)
+
+
+def _trace_search_tiled_serving_corpus():
+    from repro.core import search as S
+    cfg = _search_cfg()
+    mesh = _mesh1()
+    valid = jax.ShapeDtypeStruct((N,), jnp.bool_)
+    lv = jax.ShapeDtypeStruct((B,), jnp.bool_)
+    return jax.make_jaxpr(
+        lambda x, g, q, v, m: S.search_tiled(x, g, q, jnp.int32(0), cfg,
+                                             tile_b=2, mesh=mesh, valid=v,
+                                             shard="corpus", lane_valid=m)
+    )(_x(), _graph(), _queries(), valid, lv)
+
+
 def _qx_int8():
     from repro.quant import QuantizedCorpus
     return QuantizedCorpus(
@@ -320,6 +345,9 @@ _REGISTRY = {
     "core/search.search_tiled@mesh": _trace_search_tiled_sharded,
     "core/search.search_tiled@corpus-mesh": _trace_search_tiled_corpus,
     "core/search.search_tiled@pq-pallas": _trace_search_tiled_pq_pallas,
+    "core/search.search_tiled@serving-lanes": _trace_search_tiled_serving,
+    "core/search.search_tiled@serving-lanes-corpus-mesh":
+        _trace_search_tiled_serving_corpus,
     "streaming/updates.insert": _trace_streaming_insert,
     "streaming/updates.delete": _trace_streaming_delete,
 }

@@ -541,6 +541,7 @@ def search_tiled(
     qx: QuantizedCorpus | None = None,
     shard: str = "queries",
     with_stats: bool = False,
+    lane_valid: jnp.ndarray | None = None,
 ):
     """Stream an arbitrary query count through B_tile-sized ``lax.map`` tiles.
 
@@ -580,6 +581,16 @@ def search_tiled(
     lanes launched, "tiles", "tile_lanes"} — the accounting the
     work-regression tests pin down.
 
+    ``lane_valid``: optional (B,) bool — lanes marked False retire at
+    iteration 0 (they cost one seed scoring and nothing else) and their
+    output rows are unspecified. This is the serving front end's fixed-shape
+    dispatch seam: an admission tile is always padded to a constant lane
+    count so the jit cache sees one shape, and the vacant lanes ride along
+    masked instead of forcing a recompile per occupancy level. Results for
+    True lanes are bitwise identical whatever the surrounding mask says
+    (lanes never interact — the admission determinism contract in
+    tests/test_serving.py).
+
     Returns (ids, dists), plus the stats dict when ``with_stats``.
     """
     if shard not in ("queries", "corpus"):
@@ -589,6 +600,10 @@ def search_tiled(
             "tile through collectives)")
     b = queries.shape[0]
     eps = _validate_entry_points(entry_points, b, cfg.l)
+    if lane_valid is not None and lane_valid.shape != (b,):
+        raise ValueError(
+            f"lane_valid has shape {lane_valid.shape} but the query batch "
+            f"is {b}: pass one bool per lane (or None for all-live)")
     if shard == "corpus":
         if mesh is None:
             raise ValueError(
@@ -597,7 +612,8 @@ def search_tiled(
         from repro.core import search_sharded as SS
         return SS.search_tiled_corpus(x, g, queries, eps, cfg, tile_b, mesh,
                                       valid=valid, qx=qx,
-                                      with_stats=with_stats)
+                                      with_stats=with_stats,
+                                      lane_valid=lane_valid)
     tile_b = min(tile_b, b) if b > 0 else 1   # b=0 -> zero tiles, empty result
     qaxes: tuple = ()
     n_dev = 1
@@ -622,7 +638,10 @@ def search_tiled(
         if pad else eps
     q_tiles = q_p.reshape(-1, tile_b, queries.shape[1])
     ep_tiles = eps_p.reshape(-1, tile_b, eps.shape[1])
-    lv_tiles = (jnp.arange(q_p.shape[0]) < b).reshape(-1, tile_b)
+    lv = jnp.arange(q_p.shape[0]) < b
+    if lane_valid is not None:
+        lv = lv & jnp.pad(lane_valid.astype(bool), (0, pad))
+    lv_tiles = lv.reshape(-1, tile_b)
 
     def tiles_body(xx, gg, vv, qq, qt, et, lt):
         return jax.lax.map(

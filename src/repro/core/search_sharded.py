@@ -87,9 +87,12 @@ def corpus_placement_bytes(n: int, d: int, capacity: int, n_dev: int,
 
 def search_tiled_corpus(x, g, queries, eps, cfg, tile_b, mesh,
                         valid=None, qx: QuantizedCorpus | None = None,
-                        with_stats: bool = False):
+                        with_stats: bool = False,
+                        lane_valid=None):
     """Row-sharded ``search_tiled`` body (call through ``search_tiled(...,
-    shard="corpus")``; ``eps`` arrives validated to (B, E))."""
+    shard="corpus")``; ``eps`` arrives validated to (B, E)). ``lane_valid``:
+    optional (B,) bool — False lanes retire at iteration 0 (the serving
+    fixed-tile seam, same contract as the queries-shard path)."""
     from repro.core import search as S
     from repro.core import shard as SHD
 
@@ -130,7 +133,10 @@ def search_tiled_corpus(x, g, queries, eps, cfg, tile_b, mesh,
         [eps, jnp.broadcast_to(eps[:1], (pad, eps.shape[1]))]) if pad else eps
     q_tiles = q_p.reshape(-1, ba, queries.shape[1])
     ep_tiles = eps_p.reshape(-1, ba, eps.shape[1])
-    lv_tiles = (jnp.arange(q_p.shape[0]) < b).reshape(-1, ba)
+    lv = jnp.arange(q_p.shape[0]) < b
+    if lane_valid is not None:
+        lv = lv & jnp.pad(jnp.asarray(lane_valid, bool), (0, pad))
+    lv_tiles = lv.reshape(-1, ba)
     t_count = q_tiles.shape[0]
 
     # rows: pad to a multiple of the shard count; padded rows are zero

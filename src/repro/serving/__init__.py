@@ -1,0 +1,47 @@
+"""Serving front end: asynchronous request admission over a streaming index.
+
+Everything below this package is a batch call: hand ``search_tiled`` a
+(B, d) block and wait. A serving workload is the opposite shape — queries
+arrive one at a time at unpredictable instants, each with a latency budget,
+while inserts and deletes trickle in concurrently. This package is the
+layer that turns the first shape into the second without giving up the
+repo's two hard-won invariants:
+
+* **Zero steady-state recompiles.** jit caches are shape-keyed, so the
+  admission queue (:mod:`repro.serving.admission`) coalesces requests into
+  tiles of a *constant* ``tile_lanes`` width and dispatches partially-full
+  tiles with the vacant lanes masked via ``search_tiled(lane_valid=)`` —
+  every occupancy level hits the same compiled program. The recompile guard
+  (analysis/recompile_guard.py) runs over a scripted serving session in
+  tests/test_serving.py and must count zero.
+
+* **Epoch-consistent reads under concurrent writes.** The writer path
+  (:mod:`repro.serving.writer`) batches caller inserts/deletes into
+  fixed-size commits behind :class:`repro.streaming.index.StreamingANN`'s
+  single-reference epoch swap; every dispatched tile pins the snapshot it
+  searches, so a tile in flight keeps its internally-consistent graph no
+  matter how many commits land meanwhile.
+
+Module map:
+
+* :mod:`repro.serving.admission` — size-vs-deadline admission queue
+* :mod:`repro.serving.staging`   — double-buffered host→device query staging
+* :mod:`repro.serving.writer`    — batched multi-writer commit path
+* :mod:`repro.serving.telemetry` — SLO accounting (p50/p95/p99, QPS,
+  occupancy / queue-depth histograms, epoch staleness)
+* :mod:`repro.serving.frontend`  — the event loop tying them together
+* :mod:`repro.serving.loadgen`   — deterministic open-loop load generator
+  (the harness BENCH_serving.json rows come from)
+"""
+from repro.serving.admission import AdmissionConfig, AdmissionQueue
+from repro.serving.frontend import ServingConfig, ServingFrontend
+from repro.serving.loadgen import LoadSpec, arrival_times, run_session
+from repro.serving.staging import DoubleBuffer
+from repro.serving.telemetry import Telemetry
+from repro.serving.writer import BatchedWriter, WriterConfig, WriteTicket
+
+__all__ = [
+    "AdmissionConfig", "AdmissionQueue", "BatchedWriter", "DoubleBuffer",
+    "LoadSpec", "ServingConfig", "ServingFrontend", "Telemetry",
+    "WriteTicket", "WriterConfig", "arrival_times", "run_session",
+]

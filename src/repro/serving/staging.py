@@ -1,0 +1,71 @@
+"""Double-buffered host→device query staging.
+
+Each dispatched tile needs its admitted queries packed from the per-request
+host rows into one dense (tile_lanes, d) f32 block and shipped to the
+device. Two details matter for the serving loop:
+
+* **Reused buffers, constant shape.** The pack target alternates between
+  two preallocated host arrays instead of allocating per tile — the block
+  shape never varies (vacant lanes are zero-filled and masked downstream by
+  ``lane_valid``), so the transfer is the same size every time and the jit
+  cache sees one query shape forever.
+
+* **Overlap.** ``jax.device_put`` is asynchronous on accelerator backends:
+  the transfer for tile t+1 is issued from the *alternate* buffer while the
+  device still executes tile t, so packing and H2D for the next tile hide
+  behind the current tile's search. The alternation is what makes that safe
+  — buffer A is not rewritten until the transfer issued from it two tiles
+  ago has certainly been consumed (the frontend bounds in-flight tiles at
+  ``pipeline_depth <= 2``; a deeper pipeline would need a ring of
+  ``depth`` buffers, enforced below).
+
+On the CPU backend the transfer is effectively a copy and the overlap is
+moot, but the code path — and therefore the telemetry and the recompile
+accounting — is identical to what an accelerator run executes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+class DoubleBuffer:
+    """Ring of ``depth`` reusable (tile_lanes, d) host staging buffers."""
+
+    def __init__(self, tile_lanes: int, d: int, depth: int = 2):
+        if tile_lanes < 1 or d < 1:
+            raise ValueError(
+                f"tile_lanes and d must be >= 1, got ({tile_lanes}, {d})")
+        if depth < 2:
+            raise ValueError(
+                f"depth must be >= 2 (one buffer would be rewritten while "
+                f"its transfer is still in flight), got {depth}")
+        self.tile_lanes = tile_lanes
+        self.d = d
+        self._bufs = [np.zeros((tile_lanes, d), np.float32)
+                      for _ in range(depth)]
+        self._turn = 0
+
+    def stage(self, rows: list[np.ndarray]) -> jax.Array:
+        """Pack up to ``tile_lanes`` host rows into the next buffer and issue
+        the device transfer. Vacant lanes are zeroed (their results are
+        discarded via ``lane_valid`` masking, but a stale query from a prior
+        tile must never alias into a fresh one)."""
+        k = len(rows)
+        if k > self.tile_lanes:
+            raise ValueError(
+                f"{k} rows exceed the tile width {self.tile_lanes}")
+        buf = self._bufs[self._turn]
+        self._turn = (self._turn + 1) % len(self._bufs)
+        for i, r in enumerate(rows):
+            buf[i] = r
+        buf[k:] = 0.0
+        return jax.device_put(jnp.asarray(buf))
+
+    def lane_mask(self, k: int) -> np.ndarray:
+        """(tile_lanes,) bool with the first ``k`` lanes live."""
+        m = np.zeros((self.tile_lanes,), bool)
+        m[:k] = True
+        return m

@@ -1,0 +1,143 @@
+"""SLO telemetry: per-request lifecycle timestamps folded into the numbers
+an operator actually pages on.
+
+Every request is stamped three times — **enqueue** (admission), **dispatch**
+(its tile launched), **complete** (its tile's results were materialized on
+the host) — and every tile records its occupancy, the queue depth it left
+behind, and the store epoch at dispatch vs completion. ``summary()`` folds
+those into:
+
+* latency percentiles (p50/p95/p99, ms) of complete - enqueue, the
+  user-visible number; plus the dispatch-wait component (dispatch -
+  enqueue) so "queueing" and "compute" regressions are distinguishable,
+* achieved QPS = completed requests / (last completion - first enqueue),
+* deadline hit rate (completions within each request's admitted budget),
+* batch-occupancy histogram (how full tiles ran — the admission policy's
+  operating point) and queue-depth histogram (backlog distribution),
+* epoch staleness per tile (epoch at completion minus epoch at dispatch:
+  how many write commits landed while the tile was in flight — the
+  concurrency the epoch-snapshot design absorbs),
+* write-commit counts per kind.
+
+Pure numpy over plain floats — no jax, so recording never perturbs the
+compile caches the recompile guard is watching.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+_PCTS = (50.0, 95.0, 99.0)
+
+
+def _pct(a: np.ndarray, q: float) -> float:
+    return float(np.percentile(a, q)) if a.size else float("nan")
+
+
+class Telemetry:
+    """Append-only recorder; ``summary()`` is the only reader."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._enq: dict[int, float] = {}
+        self._deadline: dict[int, float] = {}
+        self._disp: dict[int, float] = {}
+        self._comp: dict[int, float] = {}
+        self._tiles: list[dict] = []
+        self._commits: list[dict] = []
+
+    # ------------------------------------------------------------- recording
+    def record_enqueue(self, rid: int, t: float, deadline_t: float) -> None:
+        with self._lock:
+            self._enq[rid] = t
+            self._deadline[rid] = deadline_t
+
+    def record_dispatch(self, rids: list[int], t: float, *, occupancy: int,
+                        tile_lanes: int, queue_depth: int,
+                        epoch: int) -> None:
+        with self._lock:
+            for r in rids:
+                self._disp[r] = t
+            self._tiles.append({
+                "t": t, "occupancy": occupancy, "tile_lanes": tile_lanes,
+                "queue_depth": queue_depth, "epoch_dispatch": epoch,
+                "epoch_complete": None, "work": None,
+            })
+
+    def record_complete(self, rids: list[int], t: float, *, tile_index: int,
+                        epoch: int, work: int | None = None) -> None:
+        with self._lock:
+            for r in rids:
+                self._comp[r] = t
+            tile = self._tiles[tile_index]
+            tile["epoch_complete"] = epoch
+            tile["work"] = work
+
+    def record_commit(self, kind: str, n: int, epoch: int) -> None:
+        with self._lock:
+            self._commits.append({"kind": kind, "n": n, "epoch": epoch})
+
+    @property
+    def tiles_dispatched(self) -> int:
+        with self._lock:
+            return len(self._tiles)
+
+    # --------------------------------------------------------------- summary
+    def summary(self) -> dict:
+        with self._lock:
+            done = sorted(r for r in self._comp if r in self._enq)
+            enq = np.array([self._enq[r] for r in done])
+            disp = np.array([self._disp[r] for r in done])
+            comp = np.array([self._comp[r] for r in done])
+            dl = np.array([self._deadline[r] for r in done])
+            tiles = [dict(t) for t in self._tiles]
+            commits = list(self._commits)
+
+        lat = (comp - enq) * 1e3                      # ms, user-visible
+        wait = (disp - enq) * 1e3                     # ms, queueing component
+        span = float(comp.max() - enq.min()) if done else 0.0
+        occ = np.array([t["occupancy"] / t["tile_lanes"] for t in tiles]) \
+            if tiles else np.zeros((0,))
+        depth = np.array([t["queue_depth"] for t in tiles], np.int64) \
+            if tiles else np.zeros((0,), np.int64)
+        stale = np.array([t["epoch_complete"] - t["epoch_dispatch"]
+                          for t in tiles
+                          if t["epoch_complete"] is not None], np.int64)
+        occ_hist, occ_edges = np.histogram(occ, bins=8, range=(0.0, 1.0))
+        if depth.size:
+            dmax = max(int(depth.max()), 1)
+            d_edges = [0] + [2 ** i for i in range(dmax.bit_length() + 1)]
+            d_hist, _ = np.histogram(depth, bins=d_edges)
+        else:
+            d_edges, d_hist = [0, 1], np.zeros((1,), np.int64)
+        out = {
+            "completed": len(done),
+            "achieved_qps": (len(done) / span) if span > 0 else float("nan"),
+            "latency_ms": {f"p{int(q)}": _pct(lat, q) for q in _PCTS},
+            "dispatch_wait_ms": {f"p{int(q)}": _pct(wait, q) for q in _PCTS},
+            "deadline_hit_rate": float(np.mean(comp <= dl)) if done else
+            float("nan"),
+            "tiles": len(tiles),
+            "occupancy_mean": float(occ.mean()) if occ.size else float("nan"),
+            "occupancy_hist": {
+                "edges": [round(float(e), 4) for e in occ_edges],
+                "counts": occ_hist.astype(int).tolist(),
+            },
+            "queue_depth_p95": _pct(depth.astype(np.float64), 95.0),
+            "queue_depth_hist": {
+                "edges": [int(e) for e in d_edges],
+                "counts": d_hist.astype(int).tolist(),
+            },
+            "staleness_mean": float(stale.mean()) if stale.size else 0.0,
+            "staleness_max": int(stale.max()) if stale.size else 0,
+            "write_commits": {
+                k: sum(1 for c in commits if c["kind"] == k)
+                for k in ("insert", "delete")
+            },
+            "rows_written": {
+                k: sum(c["n"] for c in commits if c["kind"] == k)
+                for k in ("insert", "delete")
+            },
+        }
+        return out

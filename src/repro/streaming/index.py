@@ -71,6 +71,16 @@ class StreamingANN:
     cfg: U.StreamingConfig
     mesh: Mesh | None = None
 
+    def __post_init__(self):
+        # A freshly wrapped store (grow(), restore(), manual construction)
+        # holds host-default-placed arrays, while every mesh update program
+        # emits NamedSharding-placed ones — so without committing it to the
+        # mesh here, the first insert/delete after construction recompiles
+        # every update program at *identical shapes* (a sharding transition,
+        # invisible to the shape-discipline argument and poison for the
+        # serving path's zero-steady-state-compile contract).
+        self.store = _place(self.store, self.mesh)
+
     # ------------------------------------------------------------ lifecycle
     @classmethod
     def from_corpus(cls, x, cfg: U.StreamingConfig | None = None,
@@ -98,11 +108,22 @@ class StreamingANN:
         return int(st.epoch), st
 
     def search(self, queries, cfg: S.SearchConfig | None = None,
-               entry_points=None, tile_b: int = 256):
+               entry_points=None, tile_b: int = 256,
+               shard: str = "queries", with_stats: bool = False,
+               lane_valid=None, store: ST.Store | None = None):
         """Tombstone-aware serving over the current epoch's snapshot:
         deleted rows route traffic but never appear in the top-k; lanes
-        reaching fewer than topk live vertices pad with (-1, +inf)."""
-        st = self.store                      # one read = a consistent epoch
+        reaching fewer than topk live vertices pad with (-1, +inf).
+
+        ``shard``/``with_stats``/``lane_valid`` pass straight through to
+        :func:`repro.core.search.search_tiled` — the serving front end uses
+        ``lane_valid`` to dispatch constant-shape admission tiles with the
+        vacant lanes masked (zero steady-state recompiles) and ``shard=
+        "corpus"`` to serve a row-partitioned store. ``store=`` searches an
+        explicit snapshot (from :meth:`snapshot`) instead of re-reading the
+        live reference — the seam that pins a dispatched tile to one epoch
+        even while the writer commits."""
+        st = self.store if store is None else store  # one read = one epoch
         cfg = cfg if cfg is not None else S.SearchConfig()
         qx = None
         if cfg.quant.is_coded:
@@ -122,7 +143,9 @@ class StreamingANN:
                                                  valid=valid)
         return S.search_tiled(st.x, st.graph, jnp.asarray(queries),
                               entry_points, cfg, tile_b=tile_b,
-                              mesh=self.mesh, valid=valid, qx=qx)
+                              mesh=self.mesh, valid=valid, qx=qx,
+                              shard=shard, with_stats=with_stats,
+                              lane_valid=lane_valid)
 
     # -------------------------------------------------------------- updates
     def insert(self, new_x) -> np.ndarray:
@@ -140,13 +163,48 @@ class StreamingANN:
         self.store = st                      # atomic epoch swap
         return slots
 
-    def delete(self, ids) -> None:
-        """Tombstone + splice-repair a batch of row ids (idempotent)."""
-        self.store = U.delete(self.store, ids, self.cfg, mesh=self.mesh)
+    def delete(self, ids) -> np.ndarray:
+        """Tombstone + splice-repair a batch of row ids.
+
+        Returns a bool mask aligned with ``ids``: True where the id was a
+        live row at call entry (this call tombstoned it), False where it
+        was already tombstoned (the repeat is a no-op — delete stays
+        idempotent, but the caller now *sees* which deletes landed instead
+        of a silent swallow). Ids that were never handed out — negative,
+        beyond capacity, or pointing at an unoccupied row — raise
+        ``IndexError``: they indicate a corrupted external id book, and the
+        old silent skip turned that bug into quietly-undeleted data.
+        Duplicate ids in one batch all report the pre-call liveness (each
+        True)."""
+        st = self.store
+        ids_np = np.asarray(ids).reshape(-1).astype(np.int64)
+        cap = st.capacity
+        oob = (ids_np < 0) | (ids_np >= cap)
+        if np.any(oob):
+            bad = ids_np[oob][:8]
+            raise IndexError(
+                f"delete ids out of range [0, {cap}): {bad.tolist()}"
+                f"{'...' if int(np.sum(oob)) > 8 else ''} — row ids come "
+                "from insert()/from_corpus and never leave the capacity")
+        occ = np.asarray(st.occupied)
+        unocc = ~occ[ids_np]
+        if np.any(unocc):
+            bad = ids_np[unocc][:8]
+            raise IndexError(
+                f"delete ids name unoccupied rows: {bad.tolist()}"
+                f"{'...' if int(np.sum(unocc)) > 8 else ''} — these were "
+                "never assigned by insert() (stale ids from before a "
+                "compact()? translate through last_remap)")
+        newly = ~np.asarray(st.tombstone)[ids_np]
+        self.store = U.delete(st, ids, self.cfg, mesh=self.mesh)
+        return newly
 
     def compact(self, repair_sweeps: int = 1) -> np.ndarray:
         """Physically drop tombstoned rows (dense renumbering; returns the
-        old-row -> new-row remap, -1 for removed). ``repair_sweeps`` full
+        old-row -> new-row remap, -1 for removed). The remap also persists
+        on the store (``last_remap``) and through ``save()``/``restore()``,
+        so an external id book can still be translated after a checkpoint
+        cycle — the pre-PR-9 behaviour dropped it. ``repair_sweeps`` full
         ``update_neighbors`` passes run afterwards to re-knit regions that
         leaned on tombstone bridges (0 to skip) — row-sharded over the mesh
         when one is bound (bitwise-identical to single-device, like every
@@ -199,7 +257,8 @@ class StreamingANN:
         else:
             qx_like = None
         like = ST.Store(x=0, graph=G.Graph(0, 0, 0), occupied=0, tombstone=0,
-                        epoch=0, qx=qx_like)
+                        epoch=0, qx=qx_like,
+                        remap=0 if ".remap" in names else None)
         st = checkpoint.restore(ckpt_dir, step, like)
         st = jax.tree.map(jnp.asarray, st)
         if cfg is None:
@@ -221,6 +280,14 @@ class StreamingANN:
     @property
     def capacity(self) -> int:
         return self.store.capacity
+
+    @property
+    def last_remap(self) -> np.ndarray | None:
+        """The most recent :meth:`compact`'s old-row -> new-row map (-1 =
+        removed), or None if the store was never compacted. Survives
+        ``save()``/``restore()``."""
+        rm = self.store.remap
+        return None if rm is None else np.asarray(rm)
 
     def stats(self) -> dict[str, Any]:
         st = self.store

@@ -43,13 +43,22 @@ from repro.quant import Quantization, QuantizedCorpus, encode_corpus
 class Store(NamedTuple):
     """x: (C, d) f32 (zeros in unoccupied rows) | graph: (C, M) adjacency |
     occupied / tombstone: (C,) bool | epoch: () int32 update counter |
-    qx: optional quantized codes (trailing, default None, so checkpoints
-    and pytree traversals of unquantized stores are unchanged).
+    qx: optional quantized codes | remap: optional last-compaction remap
+    (both trailing, default None, so checkpoints and pytree traversals of
+    stores that never held them are unchanged — None fields are leafless
+    under pytree flatten).
 
     A quantized store keeps *both* representations resident: ``qx.codes``
     serve the coded search (and grow / compact / checkpoint exactly like
     ``x``), while ``x`` stays for the exact rerank tail and for the f32
-    update/repair sweeps."""
+    update/repair sweeps.
+
+    ``remap`` is the survivor map of the most recent :func:`compact`:
+    ``remap[old_row] -> new_row`` (-1 for removed rows), sized to the
+    *pre*-compaction capacity. Callers that handed out row ids before the
+    compaction translate through it; persisting it in the store means a
+    ``save()``/``restore()`` cycle between compact and translation no
+    longer strands external id books (the PR-9 bugfix)."""
 
     x: jnp.ndarray
     graph: G.Graph
@@ -57,6 +66,7 @@ class Store(NamedTuple):
     tombstone: jnp.ndarray
     epoch: jnp.ndarray
     qx: QuantizedCorpus | None = None
+    remap: jnp.ndarray | None = None
 
     @property
     def capacity(self) -> int:
@@ -156,6 +166,7 @@ def grow(store: Store, min_capacity: int) -> Store:
         tombstone=jnp.pad(store.tombstone, (0, pad)),
         epoch=store.epoch,
         qx=_pad_codes(store.qx, pad),
+        remap=store.remap,
     )
 
 
@@ -167,7 +178,10 @@ def compact(store: Store) -> tuple[Store, np.ndarray]:
     already bridged around them) and each row is re-sorted to the row
     invariant. Returns ``(new_store, remap)`` where ``remap[old_row]`` is the
     new row id, or -1 for removed rows — callers that hand out row ids must
-    translate through it. Host-level (shape change), like :func:`grow`."""
+    translate through it. The same remap is stored on ``new_store.remap``
+    so it survives a ``save()``/``restore()`` cycle (a pre-PR-9 compact
+    lost it the moment the returned array went out of scope). Host-level
+    (shape change), like :func:`grow`."""
     occ = np.asarray(store.occupied)
     tomb = np.asarray(store.tombstone)
     alive = occ & ~tomb
@@ -200,6 +214,7 @@ def compact(store: Store) -> tuple[Store, np.ndarray]:
         tombstone=jnp.zeros((cap2,), bool),
         epoch=store.epoch + 1,
         qx=qx2,
+        remap=jnp.asarray(remap),
     )
     return new, remap
 

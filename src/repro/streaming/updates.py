@@ -344,7 +344,7 @@ def insert(store: Store, new_x, cfg: StreamingConfig,
             codes=qx2.codes.at[jnp.asarray(slots)].set(
                 encode_rows(new_x, qx2)))
     return Store(x=x2, graph=g2, occupied=occ2, tombstone=store.tombstone,
-                 epoch=store.epoch + 1, qx=qx2), slots
+                 epoch=store.epoch + 1, qx=qx2, remap=store.remap), slots
 
 
 # ------------------------------------------------------------------- delete
@@ -453,4 +453,5 @@ def delete(store: Store, ids, cfg: StreamingConfig, mesh=None) -> Store:
     g2 = _repair(store.x, store.graph, tomb_new, jnp.asarray(a_idx), cfg,
                  mesh)
     return Store(x=store.x, graph=g2, occupied=store.occupied,
-                 tombstone=tomb_new, epoch=store.epoch + 1, qx=store.qx)
+                 tombstone=tomb_new, epoch=store.epoch + 1, qx=store.qx,
+                 remap=store.remap)

@@ -151,6 +151,42 @@ def test_streaming_restore_missing_raises(tmp_path):
         StreamingANN.restore(str(tmp_path / "void"))
 
 
+def test_streaming_compact_remap_roundtrip(corpus, tmp_path):
+    """compact()'s old-row -> new-row translation persists with the store:
+    after save/restore, ``last_remap`` still maps pre-compact ids — the only
+    way a client holding old row ids can follow a compaction that happened
+    before a checkpoint restart. A store that never compacted round-trips
+    ``last_remap is None`` (no phantom manifest entry)."""
+    from repro.streaming import StreamingANN, StreamingConfig
+
+    x, q = corpus
+    cfg = StreamingConfig(build=CFG, seed_l=24, seed_k=10, seed_iters=48,
+                          batch_k=4, sweeps=2, splice_k=6)
+    ann = StreamingANN.from_corpus(x[:600], cfg, key=jax.random.PRNGKey(1))
+    assert ann.last_remap is None
+    ann.save(str(tmp_path / "pre"))
+    assert StreamingANN.restore(str(tmp_path / "pre"), cfg).last_remap is None
+
+    dead = np.arange(40, 120)
+    ann.delete(dead)
+    remap = ann.compact()
+    assert np.array_equal(ann.last_remap, remap)
+    ids0, d0 = ann.search(q, SCFG, tile_b=16)
+    ann.save(str(tmp_path / "post"))
+    back = StreamingANN.restore(str(tmp_path / "post"), cfg)
+    got = back.last_remap
+    assert got is not None and np.array_equal(got, remap)
+    assert np.all(got[dead] == -1)           # removed rows translate to -1
+    surv = np.setdiff1d(np.arange(600), dead)
+    assert np.array_equal(np.sort(got[surv]),
+                          np.arange(surv.size))   # dense renumbering intact
+    # the restored store serves identically to the compacted original
+    ids1, d1 = back.search(q, SCFG, tile_b=16)
+    assert np.array_equal(np.asarray(ids0), np.asarray(ids1))
+    assert np.array_equal(np.asarray(G.dist_key(d0)),
+                          np.asarray(G.dist_key(d1)))
+
+
 # ----------------------------------------------------- quantized persistence
 def _qx_equal(a, b):
     assert (a is None) == (b is None)

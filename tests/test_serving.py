@@ -1,0 +1,334 @@
+"""Serving front end (src/repro/serving/): admission, staging, writer,
+telemetry, and the two end-to-end contracts this PR ships:
+
+  * **determinism** — identical arrival orders produce bitwise-identical
+    per-request results regardless of how the admission queue coalesces
+    them into tiles (different tile widths, different pump schedules, full
+    vs deadline-triggered partial tiles);
+  * **zero steady-state compiles** — a scripted serving session (searches
+    interleaved with fixed-size write commits) compiles no XLA program
+    after the warmup that touches each steady-state shape once.
+
+Plus the update-path surfacing from the same PR: ``StreamingANN.delete``
+returns the tombstoned-now mask and raises on out-of-range / never-occupied
+ids (the updates-layer ``U.delete`` stays lenient; the index-level API is
+the strict one because ids arrive from *users* there, not from the repair
+machinery).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rnn_descent as rd
+from repro.core import search as S
+from repro.data.synthetic import VectorDatasetSpec, clustered_vectors
+from repro.serving import (AdmissionConfig, AdmissionQueue, BatchedWriter,
+                           DoubleBuffer, LoadSpec, ServingConfig,
+                           ServingFrontend, WriterConfig, arrival_times,
+                           run_session)
+from repro.streaming import StreamingANN, StreamingConfig
+from repro.streaming import store as ST
+
+CFG = StreamingConfig(
+    build=rd.RNNDescentConfig(s=8, r=16, t1=2, t2=3, capacity=24, chunk=128),
+    seed_l=32, seed_k=12, seed_iters=64, batch_k=4, sweeps=2, splice_k=6,
+)
+SCFG = S.SearchConfig(l=32, k=16, max_iters=96, topk=10)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    x, q = clustered_vectors(
+        jax.random.PRNGKey(0),
+        VectorDatasetSpec("serve", n=700, d=24, n_queries=60, n_clusters=8),
+    )
+    return np.asarray(x), np.asarray(q)
+
+
+@pytest.fixture(scope="module")
+def base_ann(corpus):
+    x, _ = corpus
+    return StreamingANN.from_corpus(x[:500], CFG, key=jax.random.PRNGKey(1))
+
+
+class ManualClock:
+    """Deterministic monotonic clock for replaying sessions."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+# ------------------------------------------------------------ admission unit
+def test_admission_size_trigger():
+    q = AdmissionQueue(AdmissionConfig(tile_lanes=4, deadline_s=1.0,
+                                       dispatch_fraction=0.5))
+    row = np.zeros((8,), np.float32)
+    for i in range(3):
+        q.submit(row, now=0.0)
+    assert q.depth() == 3
+    assert not q.ready(now=0.2)          # partial, budget barely touched
+    q.submit(row, now=0.2)
+    assert q.ready(now=0.2)              # full tile dispatches immediately
+    reqs = q.take()
+    assert [r.rid for r in reqs] == [0, 1, 2, 3]   # FIFO, dense rids
+    assert q.depth() == 0 and not q.ready(now=0.2)
+
+
+def test_admission_deadline_trigger():
+    q = AdmissionQueue(AdmissionConfig(tile_lanes=64, deadline_s=0.1,
+                                       dispatch_fraction=0.5))
+    q.submit(np.zeros((4,), np.float32), now=1.0)
+    assert not q.ready(now=1.049)        # oldest has spent < half its budget
+    assert q.next_trigger() == pytest.approx(1.05)
+    assert q.ready(now=1.05)             # ... and dispatches at half
+    # a per-request budget overrides the config default
+    q.take()
+    q.submit(np.zeros((4,), np.float32), now=2.0, deadline_s=1.0)
+    assert not q.ready(now=2.4)
+    assert q.ready(now=2.5)
+
+
+def test_admission_overflow_sheds():
+    q = AdmissionQueue(AdmissionConfig(tile_lanes=2, max_queue=2))
+    q.submit(np.zeros(2, np.float32), now=0.0)
+    q.submit(np.zeros(2, np.float32), now=0.0)
+    with pytest.raises(OverflowError):
+        q.submit(np.zeros(2, np.float32), now=0.0)
+
+
+def test_staging_fixed_shape_and_zeroed_lanes():
+    db = DoubleBuffer(tile_lanes=4, d=3)
+    rows = [np.full((3,), 7.0, np.float32), np.full((3,), 9.0, np.float32)]
+    t = np.asarray(db.stage(rows))
+    assert t.shape == (4, 3) and t.dtype == np.float32
+    assert np.all(t[0] == 7.0) and np.all(t[1] == 9.0)
+    assert np.all(t[2:] == 0.0)          # vacant lanes never alias old tiles
+    assert db.lane_mask(2).tolist() == [True, True, False, False]
+    with pytest.raises(ValueError):
+        db.stage([rows[0]] * 5)
+    with pytest.raises(ValueError):
+        DoubleBuffer(tile_lanes=4, d=3, depth=1)
+
+
+# ------------------------------------------------- delete surfacing (index)
+def test_delete_returns_tombstoned_now_mask(corpus, base_ann):
+    ann = StreamingANN(store=base_ann.store, cfg=CFG)
+    mask = ann.delete(np.array([3, 5, 9]))
+    assert mask.dtype == bool and mask.tolist() == [True, True, True]
+    # idempotent: already-tombstoned ids come back False, no raise, no epoch
+    ep = ann.epoch
+    again = ann.delete(np.array([5, 11]))
+    assert again.tolist() == [False, True]
+    assert ann.epoch == ep + 1
+    noop = ann.delete(np.array([3, 5, 9, 11]))
+    assert noop.tolist() == [False] * 4
+    assert ann.epoch == ep + 1           # all-dead batch is a no-op
+
+
+def test_delete_raises_on_bad_ids(base_ann):
+    ann = StreamingANN(store=base_ann.store, cfg=CFG)
+    with pytest.raises(IndexError):
+        ann.delete(np.array([-1]))                   # negative
+    with pytest.raises(IndexError):
+        ann.delete(np.array([ann.capacity]))         # past capacity
+    with pytest.raises(IndexError):
+        ann.delete(np.array([ann.capacity - 1]))     # padded, never occupied
+    # the failed calls must not have touched the index
+    assert int(np.sum(np.asarray(ann.store.tombstone))) == 0
+
+
+# ------------------------------------------------------------------- writer
+def test_writer_fixed_batches_and_tickets(corpus, base_ann):
+    x, _ = corpus
+    ann = StreamingANN(store=ST.grow(base_ann.store, 600), cfg=CFG)
+    w = BatchedWriter(ann, WriterConfig(insert_batch=4, delete_batch=4))
+    t1 = w.submit_insert(x[500:503])     # 3 rows: below one batch
+    assert w.commit() == 0 and not t1.done      # partial tail stays queued
+    t2 = w.submit_insert(x[503:505])     # 2 more: one full batch + 1 tail
+    assert w.commit() == 1
+    assert t1.done and not t2.done       # t1's rows all landed in the batch
+    assert np.all(t1.ids >= 0)
+    live0 = int(ann.live)
+    t3 = w.submit_delete(t1.ids)         # 3 ids < delete_batch
+    td = w.submit_delete(np.array([int(t1.ids[0])]))  # 1 dup -> full batch
+    assert w.commit() == 1 and t3.done and td.done
+    assert t3.mask().tolist() == [True, True, True]
+    # a same-batch duplicate reads the same pre-commit liveness: also True
+    assert td.mask().tolist() == [True]
+    assert int(ann.live) == live0 - 3
+    # a *later* batch sees them tombstoned: all False, and no epoch bump
+    t5 = w.submit_delete(np.concatenate([t1.ids, t1.ids[:1]]))
+    ep = ann.epoch
+    assert w.commit() == 1 and t5.mask().tolist() == [False] * 4
+    assert ann.epoch == ep               # all-dead delete batch is a no-op
+    # force flushes the insert tail at its (one-off) partial shape
+    assert w.commit(force=True) == 1 and t2.done
+    assert w.pending() == (0, 0)
+    with pytest.raises(ValueError):
+        t2.mask()                        # mask() is a delete-ticket accessor
+
+
+# ------------------------------------------------- determinism across tiles
+def _serve_all(ann, queries, tile_lanes, clock_dt, writes_between=False,
+               pump_every=1):
+    """Submit every query in order, pumping every ``pump_every`` submits
+    with a manual clock advancing ``clock_dt`` per submit; returns
+    {rid: (ids, dists)} after drain."""
+    clock = ManualClock()
+    fe = ServingFrontend(
+        ann,
+        ServingConfig(admission=AdmissionConfig(tile_lanes=tile_lanes,
+                                                deadline_s=0.05),
+                      writer=WriterConfig(insert_batch=4, delete_batch=4),
+                      search=SCFG),
+        clock=clock)
+    rids = []
+    for i, row in enumerate(queries):
+        rids.append(fe.submit(row))
+        clock.advance(clock_dt)
+        if (i + 1) % pump_every == 0:
+            fe.pump()
+    fe.drain()
+    return {r: fe.result(r) for r in rids}
+
+
+def test_results_independent_of_coalescing(corpus, base_ann):
+    """The contract: per-request results are a function of (query, store
+    epoch) only — never of tile width, lane position, occupancy, or pump
+    cadence."""
+    x, q = corpus
+    ann = StreamingANN(store=base_ann.store, cfg=CFG)
+    ref = _serve_all(ann, q, tile_lanes=16, clock_dt=0.0)
+    # different tile width, deadline-triggered partials (big dt), odd width
+    # that never divides the request count, and a lazy pump cadence
+    for lanes, dt, every in ((4, 0.0, 1), (16, 0.03, 1), (7, 0.001, 1),
+                             (16, 0.0, 5)):
+        got = _serve_all(ann, q, tile_lanes=lanes, clock_dt=dt,
+                         pump_every=every)
+        assert got.keys() == ref.keys()
+        for rid in ref:
+            assert np.array_equal(got[rid][0], ref[rid][0]), \
+                (lanes, dt, every, rid)
+            assert np.array_equal(got[rid][1], ref[rid][1]), \
+                (lanes, dt, every, rid)
+
+
+def test_epoch_snapshot_pins_inflight_tile(corpus, base_ann):
+    """A dispatched tile serves the store it was dispatched against, even
+    when the writer commits new epochs before the tile is harvested."""
+    x, q = corpus
+    ann = StreamingANN(store=base_ann.store, cfg=CFG)
+    lanes = 8
+    clock = ManualClock()
+    fe = ServingFrontend(
+        ann,
+        ServingConfig(admission=AdmissionConfig(tile_lanes=lanes),
+                      writer=WriterConfig(insert_batch=8, delete_batch=8),
+                      search=SCFG, pipeline_depth=2),
+        clock=clock)
+    epoch0, st0 = ann.snapshot()
+    rids = [fe.submit(row) for row in q[:lanes]]
+    fe.pump()                            # dispatches; depth 2 keeps it inflight
+    assert len(fe._inflight) == 1
+    fe.submit_delete(np.arange(0, 8))    # full batch: commits on next pump
+    fe.writer.commit()
+    assert ann.epoch == epoch0 + 1       # the index moved on...
+    fe.drain(flush_writes=False)
+    # ... but the tile's results equal a direct search of the old store
+    eps = S.default_entry_point(st0.x, SCFG.metric, valid=ST.active_mask(st0))
+    want_ids, want_d = ann.search(
+        jnp.asarray(q[:lanes]), SCFG, entry_points=eps, tile_b=lanes,
+        lane_valid=jnp.ones((lanes,), bool), store=st0)
+    for lane, rid in enumerate(rids):
+        ids, dists = fe.result(rid)
+        assert np.array_equal(ids, np.asarray(want_ids)[lane])
+        assert np.array_equal(dists, np.asarray(want_d)[lane])
+    # staleness telemetry saw the epoch move under the tile
+    assert fe.telemetry.summary()["staleness_max"] >= 1
+
+
+# ------------------------------------------------ zero steady-state compiles
+def test_scripted_session_zero_steady_compiles(corpus, base_ann):
+    """Warm each steady-state shape once (full tile, one insert batch, one
+    delete batch, entry-point refresh), then run a full scripted session —
+    searches, deadline-triggered partial tiles, fixed-size commits, drain —
+    under the compile counter. Any nonzero count is a shape (or sharding)
+    leak in the serving path."""
+    from repro.analysis.recompile_guard import compile_counter
+
+    x, q = corpus
+    lanes, wb = 8, 4
+    # pre-grow so no growth recompile can land mid-session (3 events + warm)
+    ann = StreamingANN(store=ST.grow(base_ann.store, 560), cfg=CFG)
+    pool = x[500:]
+    _, st = ann.snapshot()
+    eps = S.default_entry_point(st.x, SCFG.metric, valid=ST.active_mask(st))
+    out = ann.search(jnp.asarray(q[:lanes]), SCFG, entry_points=eps,
+                     tile_b=lanes, lane_valid=jnp.ones((lanes,), bool),
+                     store=st)
+    jax.block_until_ready(out)
+    ann.insert(pool[:wb])
+    ann.delete(np.arange(24, 24 + wb))
+    _, st = ann.snapshot()
+    eps = S.default_entry_point(st.x, SCFG.metric, valid=ST.active_mask(st))
+    jax.block_until_ready(eps)
+
+    writes = []
+    for e in range(3):
+        writes += [(10 * (e + 1), "insert",
+                    pool[wb * (e + 1):wb * (e + 2)]),
+                   (10 * (e + 1), "delete",
+                    np.arange(32 + wb * e, 32 + wb * (e + 1)))]
+    fe = ServingFrontend(
+        ann,
+        ServingConfig(admission=AdmissionConfig(tile_lanes=lanes,
+                                                deadline_s=0.05),
+                      writer=WriterConfig(insert_batch=wb, delete_batch=wb),
+                      search=SCFG))
+    spec = LoadSpec(n_requests=40, qps=2000.0, deadline_s=0.05, seed=3)
+    with compile_counter() as cc:
+        summ = run_session(fe, q, spec, writes=writes)
+    assert summ["completed"] == 40
+    assert summ["rows_written"] == {"insert": 12, "delete": 12}
+    assert cc.count == 0, f"{cc.count} steady-state compiles leaked"
+
+
+# ---------------------------------------------------------------- telemetry
+def test_session_telemetry_summary(corpus, base_ann):
+    x, q = corpus
+    ann = StreamingANN(store=base_ann.store, cfg=CFG)
+    fe = ServingFrontend(
+        ann, ServingConfig(admission=AdmissionConfig(tile_lanes=8),
+                           search=SCFG))
+    summ = run_session(fe, q, LoadSpec(n_requests=30, qps=5000.0,
+                                       deadline_s=0.25, seed=1))
+    assert summ["completed"] == 30 and len(summ["rids"]) == 30
+    lat = summ["latency_ms"]
+    assert 0 <= lat["p50"] <= lat["p95"] <= lat["p99"]
+    assert summ["dispatch_wait_ms"]["p50"] >= 0
+    assert 0 < summ["occupancy_mean"] <= 1.0
+    assert sum(summ["occupancy_hist"]["counts"]) == summ["tiles"]
+    assert summ["achieved_qps"] > 0
+    assert summ["staleness_max"] == 0    # no writes in this session
+
+
+def test_loadgen_deterministic_schedules():
+    a = arrival_times(LoadSpec(n_requests=64, qps=100.0, seed=7))
+    b = arrival_times(LoadSpec(n_requests=64, qps=100.0, seed=7))
+    c = arrival_times(LoadSpec(n_requests=64, qps=100.0, seed=8))
+    assert np.array_equal(a, b) and not np.array_equal(a, c)
+    assert np.all(np.diff(a) >= 0)
+    u = arrival_times(LoadSpec(n_requests=5, qps=10.0, arrival="uniform"))
+    assert np.allclose(u, np.arange(5) / 10.0)
+    with pytest.raises(ValueError):
+        LoadSpec(arrival="bursty")
+    with pytest.raises(ValueError):
+        LoadSpec(qps=0.0)

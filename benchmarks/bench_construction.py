@@ -5,38 +5,44 @@ faster than bare NN-Descent (the paper's headline result).
 
 Additionally times the rnn-descent build under both edge-merge paths
 (``merge="bucketed"`` scatter default vs the ``merge="sort"`` lexsort oracle)
-and a per-sweep breakdown (one warmed ``update_neighbors`` +
-``add_reverse_edges`` call per mode), and records everything in the repo-root
-``BENCH_construction.json`` so the construction-speed trajectory is
-machine-comparable across PRs."""
+and a per-sweep phase breakdown derived from the obs trace (a warmed
+reduced build runs under ``repro.obs.trace`` and the per-phase means come
+from the builder's own ``rnn_descent/sweep`` / ``rnn_descent/reverse``
+spans — one ``block_until_ready`` per phase, inside the span, instead of
+the old hand-rolled timing dict that paid an extra device sync per measured
+call), and records everything in the repo-root ``BENCH_construction.json``
+so the construction-speed trajectory is machine-comparable across PRs."""
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 
 from benchmarks import common
 
 
-def _timed(fn, *args):
-    """Seconds for one warmed call."""
-    jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    jax.block_until_ready(fn(*args))
-    return time.perf_counter() - t0
-
-
 def _sweep_breakdown(x, cfg) -> dict:
-    """Per-phase seconds for one rnn-descent sweep under ``cfg.merge``."""
+    """Per-phase seconds of the rnn-descent build under ``cfg.merge``,
+    read off the builder's own spans: warm an untraced reduced build (all
+    compiles land there), re-run it traced, and aggregate
+    ``trace.summary()``. Span durations include exactly one
+    ``block_until_ready`` per phase — the sync that makes the phase
+    boundary real — so phases sum to the sweep wall time instead of
+    double-counting the device flush."""
     from repro.core import rnn_descent as rd
+    from repro.obs import trace
 
-    g = rd.random_init(jax.random.PRNGKey(2), x, cfg)
-    upd = _timed(lambda: rd.update_neighbors(x, g, cfg))
-    rev = _timed(lambda: rd.add_reverse_edges(g, cfg))
+    small = dataclasses.replace(cfg, t1=2, t2=2)
+    key = jax.random.PRNGKey(2)
+    jax.block_until_ready(rd.build(x, small, key))       # warm, untraced
+    with trace.enabled_scope():
+        rd.build(x, small, key)
+        summ = trace.summary(prefix="rnn_descent/")
+    sweep = summ.get("rnn_descent/sweep", {"mean_s": 0.0})
+    rev = summ.get("rnn_descent/reverse", {"mean_s": 0.0})
     return {
-        "update_neighbors_s": round(upd, 4),
-        "add_reverse_edges_s": round(rev, 4),
+        "update_neighbors_s": round(sweep["mean_s"], 4),
+        "add_reverse_edges_s": round(rev["mean_s"], 4),
         "sweeps_total": cfg.t1 * cfg.t2,
     }
 

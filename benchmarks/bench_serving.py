@@ -192,6 +192,14 @@ def serving_rows(mesh=None) -> list[dict]:
                 summ = run_session(fe, np.asarray(q, np.float32), spec,
                                    writes=writes)
             steady_compiles = cc.count
+            if summ["completed"] == 0:
+                # no completions -> no latency samples: telemetry reports
+                # None for every rate/percentile (never a fabricated 0.0),
+                # so there is no row to record — skip it loudly instead of
+                # writing nulls into the trajectory file
+                print(f"serving row SKIPPED (0 completed requests): "
+                      f"{ds}/dev{devices}/{shard}/{qname}")
+                continue
 
             # -------- recall on the post-churn store, same config
             st_f = ann.store
@@ -245,7 +253,7 @@ def run() -> list[dict]:
     devices = jax.device_count()
     rows = serving_rows(mesh=mesh)
     sections = {f"rows_dev{devices}": rows}
-    if devices == 1:
+    if devices == 1 and rows:
         # the SLO block the CI serving smoke asserts against: generous (5x)
         # headroom over this machine's p99 so slower runners don't flap, a
         # hard zero on steady-state compiles, and the churn recall floor.

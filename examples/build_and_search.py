@@ -152,6 +152,30 @@ batch occupancy, queue depth, and per-tile epoch staleness; the
 open-loop load generator (``run_session``/``LoadSpec``) drives the
 QPS-under-churn trajectory in repo-root BENCH_serving.json. The demo
 below replays a short churn session end to end.
+
+Observability
+-------------
+Every hot path above is instrumented behind one switch (``repro.obs``,
+off by default — a single flag check per site, and results stay bitwise
+identical either way; ROADMAP "Observability" has the contract):
+
+    from repro import obs
+    from repro.obs import trace, metrics
+
+    obs.enable()                  # spans + metrics + jax compile capture
+    g = rd.build(x, cfg, key)     # rnn_descent/sweep + /reverse spans
+    ids, d = S.search_tiled(...)  # search/tiled spans, lane-work counters
+    fe.pump()                     # serving/dispatch|readout + request spans
+
+    trace.write_chrome_trace("trace.json")   # open in ui.perfetto.dev
+    print(trace.summary_table())             # flat phase breakdown
+    print(metrics.REGISTRY.exposition())     # Prometheus text format
+
+``python -m repro.obs`` runs a scripted build+serve session end to end,
+asserts the bitwise-parity and zero-steady-compile contracts, and emits
+``trace.json`` + ``metrics.prom`` (the CI obs smoke uploads them as a
+workflow artifact). The traced-build walkthrough at the bottom of this
+demo does the miniature version inline.
 """
 import dataclasses
 import time
@@ -309,3 +333,23 @@ for quant in (Quantization(mode="int8"), Quantization(mode="pq", m=24)):
           f"{E.recall_at_k(ids_q, gt):.4f} (f32 {r1_f32:.4f})  payload "
           f"{mem['payload_ratio']:.0f}x smaller  aux "
           f"{mem['aux_bytes'] / 1024:.0f} KiB")
+
+# traced build (see "Observability" above): the same rnn-descent build with
+# the obs switch on — per-sweep spans land on a shared timeline, candidate/
+# prune counters land in the metrics registry, and the graph comes out
+# byte-identical to the untraced build at the top of this script
+from repro import obs
+from repro.obs import trace
+
+obs.enable()
+obs.reset()
+g_traced = rd.build(x, rnnd_cfg, jax.random.PRNGKey(1))
+assert np.array_equal(np.asarray(g_traced.neighbors),
+                      np.asarray(last_graph.neighbors)), \
+    "tracing must not change a result bit"
+S.search_tiled(x, g_traced, q[:128], entry, scfg, tile_b=128)
+trace.write_chrome_trace("/tmp/ann_trace.json")
+print("\ntraced build phase breakdown (full timeline: /tmp/ann_trace.json —"
+      " load in https://ui.perfetto.dev):")
+print(trace.summary_table())
+obs.disable()

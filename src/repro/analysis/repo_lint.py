@@ -21,6 +21,18 @@ Rules:
     through :func:`repro.kernels.default_interpret` (CPU-only) so TPU runs
     never silently fall back to the emulator.
 
+``perf-timing``
+    Direct ``time.perf_counter()`` / ``time.time()`` / ``time.monotonic()``
+    (and ``_ns`` / ``process_time`` variants) calls in library runtime
+    paths: ad-hoc wall-clock pairs fragment the repo's timeline into
+    un-exportable private dicts. Route through ``repro.obs.trace.timed``
+    (always measures; lands on the shared trace when obs is on) or accept
+    a caller-supplied clock (the serving front end's idiom — referencing
+    ``time.perf_counter`` as a default *value* is fine, calling it inline
+    is not). ``repro/obs/`` itself is exempt (it IS the sanctioned
+    implementation); benchmarks live outside ``src/repro`` and are never
+    scanned.
+
 Suppression: append ``# repo-lint: allow-<rule>`` on the offending line for
 the rare legitimate case (e.g. the kernel-spec ``trace()`` thunks pass
 ``interpret=True`` to an abstract trace that never executes).
@@ -39,6 +51,16 @@ _CONSUMERS = {
     "permutation", "categorical", "gumbel", "truncated_normal", "exponential",
     "laplace", "beta", "gamma", "poisson", "shuffle", "rademacher", "orthogonal",
 }
+
+# stdlib wall-clock readers whose *call* in library code bypasses the obs
+# tracer (referencing one as a default clock value is fine — no Call node).
+_TIMING_FNS = {
+    "perf_counter", "perf_counter_ns", "monotonic", "monotonic_ns",
+    "time", "time_ns", "process_time", "process_time_ns",
+}
+
+# the sanctioned timing layer itself (and its CLI) may read the clock
+_PERF_TIMING_EXEMPT = ("repro/obs/",)
 
 
 def _allowed(src_lines: list[str], lineno: int, rule: str) -> bool:
@@ -95,6 +117,16 @@ class _Visitor(ast.NodeVisitor):
                                                 "key-reuse"):
                 self._block_uses.setdefault(
                     (self._block_id, key), []).append(node.lineno)
+        fn = node.func
+        if (isinstance(fn, ast.Attribute) and fn.attr in _TIMING_FNS
+                and isinstance(fn.value, ast.Name) and fn.value.id == "time"
+                and not self.rel.startswith(_PERF_TIMING_EXEMPT)
+                and not _allowed(self.lines, node.lineno, "perf-timing")):
+            self.findings.append(Finding(
+                "lint", "perf-timing", self._where(node),
+                f"time.{fn.attr}() in a library runtime path: use "
+                "repro.obs.trace.timed (shared timeline, exports with the "
+                "trace) or accept a caller-supplied clock"))
         for kw in node.keywords:
             if (kw.arg == "interpret"
                     and isinstance(kw.value, ast.Constant)

@@ -1,7 +1,6 @@
 """Evaluation utilities: brute-force ground truth, recall, degree stats."""
 from __future__ import annotations
 
-import time
 from typing import Callable
 
 import jax
@@ -155,11 +154,15 @@ def connectivity_lower_bound(g: G.Graph, entry: int, iters: int = 64) -> float:
 
 
 def timed(fn: Callable, *args, repeats: int = 1, **kw) -> tuple[float, object]:
-    """Wall-clock a blocking call (best of ``repeats``); returns (sec, result)."""
+    """Wall-clock a blocking call (best of ``repeats``); returns (sec, result).
+    Each repeat lands on the obs trace as an ``eval/timed`` span when
+    tracing is on (repro.obs.trace.timed measures unconditionally)."""
+    from repro.obs import trace
+
+    name = getattr(fn, "__name__", type(fn).__name__)
     best, out = float("inf"), None
     for _ in range(repeats):
-        t0 = time.perf_counter()
-        out = fn(*args, **kw)
-        out = jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
+        with trace.timed("eval/timed", fn=name) as tm:
+            out = jax.block_until_ready(fn(*args, **kw))
+        best = min(best, tm.seconds)
     return best, out

@@ -127,9 +127,18 @@ def build(x: jnp.ndarray, cfg: NNDescentConfig, key: jax.Array,
     if mesh is not None:
         from repro.core import shard
         return shard.build_nn_descent(x, cfg, key, mesh)
+    from repro.obs import trace as _tr
     g = random_init(key, x, cfg)
-    for _ in range(cfg.iters):
-        g = join_and_update(x, g, cfg)
+    prev_live = None
+    for it in range(cfg.iters):
+        with _tr.span("nn_descent/iter") as sp:
+            g = join_and_update(x, g, cfg)
+            if sp:
+                from repro.obs import graphstats as _gs
+                g = jax.block_until_ready(g)
+                prev_live = _gs.record_sweep(
+                    sp, g, algo="nn_descent", phase="sweep",
+                    prev_live=prev_live, iter=it)
     return g
 
 

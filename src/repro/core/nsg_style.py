@@ -184,11 +184,31 @@ def build(x: jnp.ndarray, cfg: NSGStyleConfig, key: jax.Array,
     if mesh is not None:
         from repro.core import shard
         return shard.build_nsg_style(x, cfg, key, mesh, entry=entry)
-    knn_g = nnd.build(x, cfg.knn, key)
-    cand_ids, cand_d = expand_candidates(x, knn_g, cfg.c, cfg.metric, cfg.chunk)
-    capped = rng_cap_rows(x, cand_ids, cand_d, cfg)
+    from repro.obs import trace as _tr
+    with _tr.span("nsg_style/knn") as sp:
+        knn_g = nnd.build(x, cfg.knn, key)
+        if sp:
+            jax.block_until_ready(knn_g)
+    with _tr.span("nsg_style/expand") as sp:
+        cand_ids, cand_d = expand_candidates(x, knn_g, cfg.c, cfg.metric,
+                                             cfg.chunk)
+        if sp:
+            jax.block_until_ready(cand_ids)
+            sp.set(pool=int(cand_ids.shape[1]))
+    with _tr.span("nsg_style/prune") as sp:
+        capped = rng_cap_rows(x, cand_ids, cand_d, cfg)
+        if sp:
+            from repro.obs import graphstats as _gs
+            jax.block_until_ready(capped)
+            _gs.record_sweep(sp, capped, algo="nsg_style", phase="sweep")
     # reverse edges capped at R (NSG's final step)
-    g = G.add_reverse_edges(capped, cfg.r, merge=cfg.merge, n_buckets=cfg.n_buckets)
+    with _tr.span("nsg_style/reverse") as sp:
+        g = G.add_reverse_edges(capped, cfg.r, merge=cfg.merge,
+                                n_buckets=cfg.n_buckets)
+        if sp:
+            from repro.obs import graphstats as _gs
+            jax.block_until_ready(g)
+            _gs.record_sweep(sp, g, algo="nsg_style", phase="reverse")
     if entry is None:
         from repro.core.search import default_entry_point
         entry = default_entry_point(x, cfg.metric)
@@ -196,4 +216,8 @@ def build(x: jnp.ndarray, cfg: NSGStyleConfig, key: jax.Array,
     # cfg.merge: it runs once (nothing re-offers a collision-dropped repair
     # edge) and its "one round guarantees reachability" contract would be
     # voided by lossy bucket collisions
-    return ensure_reachable(x, g, entry, cfg.metric)
+    with _tr.span("nsg_style/repair") as sp:
+        g = ensure_reachable(x, g, entry, cfg.metric)
+        if sp:
+            jax.block_until_ready(g)
+    return g

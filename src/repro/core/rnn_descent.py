@@ -203,17 +203,40 @@ def build(x: jnp.ndarray, cfg: RNNDescentConfig, key: jax.Array,
 
     ``cfg.quant`` int8/pq builds the graph over the *decoded* corpus (see
     :func:`prep_corpus`) — the geometry the coded search will traverse; the
-    int8 prune additionally gathers code rows instead of f32 rows."""
+    int8 prune additionally gathers code rows instead of f32 rows.
+
+    Observability: with ``repro.obs`` enabled each sweep runs under an
+    ``rnn_descent/sweep`` span (each reverse pass under
+    ``rnn_descent/reverse``) that blocks once at span exit for an
+    execution-accurate duration and records edge counters — the jitted
+    programs issued are identical either way, so the built graph is
+    bitwise-equal traced or untraced (tests/test_obs.py)."""
+    from repro.obs import trace as _tr
     xb, qx = prep_corpus(x, cfg.quant)
     if mesh is not None:
         from repro.core import shard
         return shard.build_rnn_descent(xb, cfg, key, mesh, qx=qx)
     g = random_init(key, xb, cfg)
+    prev_live, sweep = None, 0
     for t1 in range(cfg.t1):
         for _ in range(cfg.t2):
-            g = update_neighbors(xb, g, cfg, qx=qx)
+            with _tr.span("rnn_descent/sweep") as sp:
+                g = update_neighbors(xb, g, cfg, qx=qx)
+                if sp:
+                    from repro.obs import graphstats as _gs
+                    g = jax.block_until_ready(g)
+                    prev_live = _gs.record_sweep(
+                        sp, g, algo="rnn_descent", phase="sweep",
+                        prev_live=prev_live, sweep=sweep, t1=t1)
+            sweep += 1
         if t1 != cfg.t1 - 1:
-            g = add_reverse_edges(g, cfg)
+            with _tr.span("rnn_descent/reverse") as sp:
+                g = add_reverse_edges(g, cfg)
+                if sp:
+                    from repro.obs import graphstats as _gs
+                    g = jax.block_until_ready(g)
+                    prev_live = _gs.record_sweep(
+                        sp, g, algo="rnn_descent", phase="reverse", t1=t1)
     return g
 
 

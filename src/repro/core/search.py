@@ -527,8 +527,6 @@ def search(
     return ids, dists
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "tile_b", "mesh", "shard",
-                                             "with_stats"))
 def search_tiled(
     x: jnp.ndarray,
     g: G.Graph,
@@ -592,7 +590,66 @@ def search_tiled(
     tests/test_serving.py).
 
     Returns (ids, dists), plus the stats dict when ``with_stats``.
+
+    Observability: this host wrapper dispatches to one jitted program
+    (``_search_tiled_jit`` — the only compiled entry point, unchanged by
+    tracing). With ``repro.obs`` enabled and concrete operands it wraps the
+    dispatch in a ``search/tiled`` span, blocks for an execution-accurate
+    duration, and folds the ``with_stats`` lane-work counters into the
+    metrics registry; called with tracers (inside an outer jit or
+    ``make_jaxpr``) it degrades to the plain dispatch, so traced callers
+    like streaming updates and the analysis registry see the identical
+    program with or without tracing.
     """
+    from repro.obs import trace as _tr
+    if not _tr.enabled() or isinstance(queries, jax.core.Tracer):
+        return _search_tiled_jit(x, g, queries, entry_points, cfg, tile_b,
+                                 mesh, valid, qx, shard, with_stats,
+                                 lane_valid)
+    from repro.obs import metrics as _mx
+    with _tr.span("search/tiled") as sp:
+        out = _search_tiled_jit(x, g, queries, entry_points, cfg, tile_b,
+                                mesh, valid, qx, shard, with_stats,
+                                lane_valid)
+        out = jax.block_until_ready(out)
+        b = int(queries.shape[0])
+        sp.set(b=b, tile_b=int(tile_b), shard=shard, l=cfg.l, k=cfg.k,
+               quant=cfg.quant.mode, mesh=mesh is not None)
+        if with_stats:
+            stats = out[2]
+            work = int(stats["work"])
+            launched = int(stats["launched"])
+            tiles = int(stats["tiles"])
+            sp.set(work=work, launched=launched, tiles=tiles,
+                   tile_lanes=int(stats["tile_lanes"]))
+            reg = _mx.REGISTRY
+            reg.counter("search_lane_work_total",
+                        help="beam iterations actually expanded "
+                             "(tiling-invariant lane work)").inc(work)
+            reg.counter("search_lanes_launched_total",
+                        help="iterations executed x lanes launched "
+                             "(includes padded/retired lanes)").inc(launched)
+            reg.counter("search_tiles_total",
+                        help="search tiles dispatched").inc(tiles)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "tile_b", "mesh", "shard",
+                                             "with_stats"))
+def _search_tiled_jit(
+    x: jnp.ndarray,
+    g: G.Graph,
+    queries: jnp.ndarray,
+    entry_points: jnp.ndarray,
+    cfg: SearchConfig,
+    tile_b: int = 256,
+    mesh=None,
+    valid: jnp.ndarray | None = None,
+    qx: QuantizedCorpus | None = None,
+    shard: str = "queries",
+    with_stats: bool = False,
+    lane_valid: jnp.ndarray | None = None,
+):
     if shard not in ("queries", "corpus"):
         raise ValueError(
             f"unknown shard mode {shard!r}: expected \"queries\" (tiles "

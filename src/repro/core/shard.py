@@ -347,20 +347,68 @@ def add_reverse_edges(g: G.Graph, r: int, mesh: Mesh,
     return G.Graph(gs.neighbors[:n], gs.dists[:n], gs.flags[:n])
 
 
+def _exchange_attrs(n: int, mesh: Mesh, buckets: int,
+                    slot_bytes: int) -> dict:
+    """Span attributes for one sweep's destination-bucketed ring exchange,
+    from the closed form in analysis/collectives.py: D-1 ppermute hops,
+    each shipping one (n_pad/D, B) block at ``slot_bytes`` per slot. The
+    exchange itself runs inside the jitted sweep (spans stay host-side),
+    so the hop structure is attached as attributes rather than timed."""
+    d = n_shards(mesh)
+    n_pad = _padded(n, d)
+    wire = slot_bytes * buckets * n_pad * (d - 1) // d if d > 1 else 0
+    return {
+        "exchange_hops": d - 1,
+        "exchange_block_rows": n_pad // d,
+        "exchange_buckets": buckets,
+        "exchange_bytes_per_device": wire,
+        "devices": d,
+    }
+
+
 def build_rnn_descent(x, cfg, key, mesh: Mesh, qx=None) -> G.Graph:
     """Sharded paper Algorithm 6 (rnn_descent.build(mesh=...) entry point).
     RandomGraph(S) is computed replicated (same key -> same init), sweeps run
     row-sharded. ``x``/``qx`` arrive pre-prepped from rnn_descent.build
-    (under ``cfg.quant`` x is already the decoded corpus)."""
+    (under ``cfg.quant`` x is already the decoded corpus).
+
+    Observability: mirrors rnn_descent.build — per-sweep
+    ``rnn_descent/sweep`` spans (attributes additionally carry the ring-
+    exchange hop count and closed-form wire bytes) when ``repro.obs`` is
+    enabled; identical jitted programs either way."""
     from repro.core import rnn_descent as rd
+    from repro.obs import trace as _tr
 
     _check_mesh(mesh, cfg.merge)
+    n = x.shape[0]
     g = rd.random_init(key, x, cfg)
+    prev_live, sweep = None, 0
     for t1 in range(cfg.t1):
         for _ in range(cfg.t2):
-            g = rnn_update_neighbors(x, g, cfg, mesh, qx=qx)
+            with _tr.span("rnn_descent/sweep") as sp:
+                g = rnn_update_neighbors(x, g, cfg, mesh, qx=qx)
+                if sp:
+                    from repro.obs import graphstats as _gs
+                    g = jax.block_until_ready(g)
+                    prev_live = _gs.record_sweep(
+                        sp, g, algo="rnn_descent", phase="sweep",
+                        prev_live=prev_live, sweep=sweep, t1=t1,
+                        **_exchange_attrs(
+                            n, mesh,
+                            cfg.n_buckets or G.default_buckets(cfg.capacity),
+                            9))
+            sweep += 1
         if t1 != cfg.t1 - 1:
-            g = add_reverse_edges(g, cfg.r, mesh, cfg.n_buckets)
+            with _tr.span("rnn_descent/reverse") as sp:
+                g = add_reverse_edges(g, cfg.r, mesh, cfg.n_buckets)
+                if sp:
+                    from repro.obs import graphstats as _gs
+                    g = jax.block_until_ready(g)
+                    prev_live = _gs.record_sweep(
+                        sp, g, algo="rnn_descent", phase="reverse", t1=t1,
+                        **_exchange_attrs(
+                            n, mesh,
+                            cfg.n_buckets or G.default_buckets(cfg.r), 22))
     return g
 
 
@@ -394,11 +442,24 @@ def nn_join_and_update(x, g: G.Graph, cfg, mesh: Mesh) -> G.Graph:
 
 def build_nn_descent(x, cfg, key, mesh: Mesh) -> G.Graph:
     from repro.core import nn_descent as nnd
+    from repro.obs import trace as _tr
 
     _check_mesh(mesh, cfg.merge)
     g = nnd.random_init(key, x, cfg)
-    for _ in range(cfg.iters):
-        g = nn_join_and_update(x, g, cfg, mesh)
+    prev_live = None
+    for it in range(cfg.iters):
+        with _tr.span("nn_descent/iter") as sp:
+            g = nn_join_and_update(x, g, cfg, mesh)
+            if sp:
+                from repro.obs import graphstats as _gs
+                g = jax.block_until_ready(g)
+                prev_live = _gs.record_sweep(
+                    sp, g, algo="nn_descent", phase="sweep",
+                    prev_live=prev_live, iter=it,
+                    **_exchange_attrs(
+                        x.shape[0], mesh,
+                        nnd.default_join_buckets(cfg, g.neighbors.shape[1]),
+                        9))
     return g
 
 
@@ -438,20 +499,42 @@ def build_nsg_style(x, cfg, key, mesh: Mesh, entry=None) -> G.Graph:
     graph is pulled to host once so the repair is literally the single-device
     computation (bitwise parity preserved)."""
     from repro.core import nsg_style
+    from repro.obs import trace as _tr
 
     _check_mesh(mesh, cfg.merge)
     if cfg.knn.merge != "bucketed":
         raise ValueError(
             f"sharded nsg-style requires knn.merge='bucketed', got "
             f"{cfg.knn.merge!r}")
-    knn = build_nn_descent(x, cfg.knn, key, mesh)
-    capped = _nsg_expand_cap(x, knn, cfg, mesh)
-    g = add_reverse_edges(capped, cfg.r, mesh, cfg.n_buckets)
+    with _tr.span("nsg_style/knn") as sp:
+        knn = build_nn_descent(x, cfg.knn, key, mesh)
+        if sp:
+            jax.block_until_ready(knn)
+    with _tr.span("nsg_style/prune") as sp:
+        capped = _nsg_expand_cap(x, knn, cfg, mesh)
+        if sp:
+            from repro.obs import graphstats as _gs
+            jax.block_until_ready(capped)
+            _gs.record_sweep(sp, capped, algo="nsg_style", phase="sweep")
+    with _tr.span("nsg_style/reverse") as sp:
+        g = add_reverse_edges(capped, cfg.r, mesh, cfg.n_buckets)
+        if sp:
+            from repro.obs import graphstats as _gs
+            jax.block_until_ready(g)
+            _gs.record_sweep(
+                sp, g, algo="nsg_style", phase="reverse",
+                **_exchange_attrs(
+                    x.shape[0], mesh,
+                    cfg.n_buckets or G.default_buckets(cfg.r), 22))
     # replicated connectivity repair: host round-trip pins the compute to the
     # default device so it is the exact single-device code path
-    g = G.Graph(*(jnp.asarray(np.asarray(a)) for a in g))
-    x_rep = jnp.asarray(np.asarray(x))
-    if entry is None:
-        from repro.core.search import default_entry_point
-        entry = default_entry_point(x_rep, cfg.metric)
-    return nsg_style.ensure_reachable(x_rep, g, entry, cfg.metric)
+    with _tr.span("nsg_style/repair") as sp:
+        g = G.Graph(*(jnp.asarray(np.asarray(a)) for a in g))
+        x_rep = jnp.asarray(np.asarray(x))
+        if entry is None:
+            from repro.core.search import default_entry_point
+            entry = default_entry_point(x_rep, cfg.metric)
+        g = nsg_style.ensure_reachable(x_rep, g, entry, cfg.metric)
+        if sp:
+            jax.block_until_ready(g)
+    return g

@@ -17,12 +17,12 @@ Pieces (all exercised by tests/test_fault_tolerance.py):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable
 
 import numpy as np
 
 from repro import checkpoint as ckpt
+from repro.obs import trace
 
 
 @dataclasses.dataclass
@@ -71,9 +71,9 @@ def run_with_restarts(
     step = start
     while step < n_steps:
         try:
-            t0 = time.perf_counter()
-            state, metrics = step_fn(state, step)
-            metrics.update(watchdog.record(time.perf_counter() - t0))
+            with trace.timed("fault/step", step=step) as tm:
+                state, metrics = step_fn(state, step)
+            metrics.update(watchdog.record(tm.seconds))
             history.append(metrics)
             if (step + 1) % ckpt_every == 0 or step == n_steps - 1:
                 ckpt.save(ckpt_dir, step, state, keep=keep)

@@ -20,8 +20,9 @@ import argparse
 import json
 import subprocess
 import sys
-import time
 import traceback
+
+from repro.obs import trace
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../benchmarks/results")
 
@@ -36,32 +37,34 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool) -> dict:
     from repro.launch.hlo_analysis import collective_summary, module_costs
     from repro.launch.mesh import make_production_mesh
 
-    t0 = time.time()
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    n_dev = mesh.devices.size
-    arch = configs.get(arch_id)
-    bound = steps.bind(arch, shape_name, reduced=False, mesh=mesh)
+    with trace.timed("dryrun/lower", arch=arch_id, shape=shape_name) as tl:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.devices.size
+        arch = configs.get(arch_id)
+        bound = steps.bind(arch, shape_name, reduced=False, mesh=mesh)
 
-    state_specs = bound.abstract_state()
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    repl = NamedSharding(mesh, P())
-    in_shardings = (
-        sh.tree_shardings(mesh, bound.state_axes) if bound.state_axes else
-        jax.tree.map(lambda _: repl, state_specs),
-        sh.tree_shardings(mesh, bound.batch_axes),
-    )
+        state_specs = bound.abstract_state()
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        repl = NamedSharding(mesh, P())
+        in_shardings = (
+            sh.tree_shardings(mesh, bound.state_axes) if bound.state_axes else
+            jax.tree.map(lambda _: repl, state_specs),
+            sh.tree_shardings(mesh, bound.batch_axes),
+        )
 
-    # out_shardings: pin the train-state output to the input (fsdp) sharding
-    # so grad reductions lower to reduce-scatter instead of all-reduce+slice
-    out_shardings = in_shardings[0] if bound.kind == "train" else None
-    if out_shardings is not None:
-        out_shardings = (out_shardings, None)   # (state, metrics)
-    jitted = jax.jit(bound.step_fn, in_shardings=in_shardings,
-                     out_shardings=out_shardings)
-    lowered = jitted.lower(state_specs, bound.input_specs)
-    t_lower = time.time() - t0
-    compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+        # out_shardings: pin the train-state output to the input (fsdp)
+        # sharding so grad reductions lower to reduce-scatter instead of
+        # all-reduce+slice
+        out_shardings = in_shardings[0] if bound.kind == "train" else None
+        if out_shardings is not None:
+            out_shardings = (out_shardings, None)   # (state, metrics)
+        jitted = jax.jit(bound.step_fn, in_shardings=in_shardings,
+                         out_shardings=out_shardings)
+        lowered = jitted.lower(state_specs, bound.input_specs)
+    t_lower = tl.seconds
+    with trace.timed("dryrun/compile", arch=arch_id, shape=shape_name) as tc:
+        compiled = lowered.compile()
+    t_compile = tc.seconds
 
     mem = compiled.memory_analysis()
     mem_info = {

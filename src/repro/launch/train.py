@@ -11,7 +11,6 @@ checkpoints + restore-on-start (distributed/fault.py drives restarts).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 
@@ -67,16 +66,17 @@ def main():
                   f"grad_norm {float(metrics.get('grad_norm', 0)):.3f}", flush=True)
         return state, {"loss": loss}
 
-    t0 = time.perf_counter()
-    if args.ckpt_dir:
-        state, history = fault.run_with_restarts(
-            make_state, one_step, n_steps=args.steps, ckpt_dir=args.ckpt_dir,
-            ckpt_every=args.ckpt_every)
-    else:
-        state = make_state()
-        for step in range(args.steps):
-            state, _ = one_step(state, step)
-    dt = time.perf_counter() - t0
+    from repro.obs import trace
+    with trace.timed("train/loop", steps=args.steps) as tm:
+        if args.ckpt_dir:
+            state, history = fault.run_with_restarts(
+                make_state, one_step, n_steps=args.steps,
+                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+        else:
+            state = make_state()
+            for step in range(args.steps):
+                state, _ = one_step(state, step)
+    dt = tm.seconds
     print(f"done: {args.steps} steps in {dt:.1f}s "
           f"({args.steps / dt:.2f} steps/s); "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")

@@ -1,0 +1,49 @@
+"""repro.obs — unified observability: span tracing, metrics, Perfetto.
+
+One switch (:func:`enable` / :func:`disable`, off by default) gates every
+instrumented path in the repo:
+
+* ``obs.trace`` — thread-safe span tracer with Chrome/Perfetto trace-event
+  JSON export and a flat summary table; no-op (single flag check, shared
+  sentinel, no allocation) while disabled.
+* ``obs.metrics`` — process-wide counters / gauges / explicit-bucket
+  histograms with Prometheus text exposition and a JSON snapshot.
+* ``obs.jaxhooks`` — jax.monitoring compile-event capture, device-memory
+  watermarks, and HLO-derived cost attributes for build spans.
+
+Hard contract (tests/test_obs.py, CI obs smoke): enabling observability
+never changes a result bit — instrumentation is host-side only (spans wrap
+jitted call sites; nothing callbacks into a traced program) and may only
+*read* device values. ``python -m repro.obs`` runs a scripted
+build + search + serve session, checks that contract, and emits
+``trace.json`` (load in https://ui.perfetto.dev) + ``metrics.prom``.
+"""
+from __future__ import annotations
+
+from repro.obs import metrics, trace
+
+enabled = trace.enabled
+enabled_scope = trace.enabled_scope
+
+
+def enable(install_jax_hooks: bool = True) -> None:
+    """Turn on span tracing + metrics recording across the repo; by
+    default also install the jax.monitoring listeners (idempotent)."""
+    if install_jax_hooks:
+        from repro.obs import jaxhooks
+        jaxhooks.install()
+    trace.enable()
+
+
+def disable() -> None:
+    trace.disable()
+
+
+def reset() -> None:
+    """Clear recorded spans and the default metrics registry."""
+    trace.reset()
+    metrics.REGISTRY.reset()
+
+
+__all__ = ["trace", "metrics", "enable", "disable", "enabled",
+           "enabled_scope", "reset"]

@@ -1,0 +1,224 @@
+"""``python -m repro.obs`` — scripted, self-checking observability session.
+
+Runs one build + search + serve pass twice — first untraced (the reference),
+then with the full obs stack enabled — and emits the artifacts an operator
+would pull from a real deployment:
+
+* ``trace.json`` — Chrome/Perfetto trace-event JSON covering the build
+  sweeps (``rnn_descent/*``), search tiles (``search/tiled``), the serving
+  request lifecycle (``serving/*`` pump spans + per-request tracks), and
+  the jax compile track;
+* ``metrics.prom`` — Prometheus text exposition of the process registry;
+* ``metrics.json`` — the same registry as a JSON snapshot.
+
+It is also the CI gate for the two hard observability contracts, exiting
+nonzero if either fails:
+
+1. **bitwise parity** — the traced build graph and search results must be
+   byte-identical to the untraced reference (tracing only adds host-side
+   reads, never a different program);
+2. **zero steady-state compiles** — after a warmup that touches every
+   steady-state program shape (full search tile, both writer batch shapes,
+   entry-point refresh), the measured serving session must bump the
+   ``jax_backend_compiles_total`` counter by exactly zero.
+
+Plus a structural check that the emitted ``trace.json`` is loadable and
+actually covers build, search, and serving span families.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _check(failures: list[str], ok: bool, label: str) -> None:
+    print(f"  [{'PASS' if ok else 'FAIL'}] {label}")
+    if not ok:
+        failures.append(label)
+
+
+def _validate_trace(path: str, failures: list[str]) -> None:
+    """Loadability + coverage check on the emitted Perfetto JSON."""
+    with open(path) as f:
+        doc = json.load(f)
+    evs = doc.get("traceEvents", [])
+    xs = [e for e in evs if e.get("ph") == "X"]
+    _check(failures, bool(xs) and all(
+        isinstance(e.get("ts"), (int, float)) and
+        isinstance(e.get("dur"), (int, float)) and e.get("name")
+        for e in xs), "trace.json is valid trace-event JSON")
+    names = {e["name"] for e in xs}
+    for family, label in [
+        ("rnn_descent/", "build sweep spans"),
+        ("search/", "search tile spans"),
+        ("serving/", "serving pump spans"),
+        ("request/", "per-request lifecycle spans"),
+    ]:
+        _check(failures, any(n.startswith(family) for n in names),
+               f"trace covers {label} ({family}*)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="scripted build+search+serve session with tracing on; "
+                    "writes trace.json + metrics.prom and self-checks the "
+                    "bitwise-parity and zero-steady-compile contracts")
+    ap.add_argument("--out", default="obs_artifacts",
+                    help="artifact directory (default: obs_artifacts)")
+    ap.add_argument("--n", type=int, default=384,
+                    help="corpus rows (default 384)")
+    ap.add_argument("--d", type=int, default=32,
+                    help="dimensions (default 32)")
+    ap.add_argument("--requests", type=int, default=96,
+                    help="serving session request count (default 96)")
+    ap.add_argument("--qps", type=float, default=400.0,
+                    help="offered load for the open-loop session")
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+
+    from repro import obs
+    from repro.core import search as S
+    from repro.obs import jaxhooks, metrics, trace
+    from repro.serving import (AdmissionConfig, LoadSpec, ServingConfig,
+                               ServingFrontend, WriterConfig, run_session)
+    from repro.streaming import StreamingANN, StreamingConfig
+    from repro.streaming import store as ST
+    from repro.streaming import updates as U  # noqa: F401  (registry warm)
+    import repro.core.rnn_descent as rd
+
+    failures: list[str] = []
+    os.makedirs(args.out, exist_ok=True)
+
+    rng = np.random.default_rng(7)
+    tile_lanes, wb, n_events = 32, 16, 2
+    pool_rows = wb * (n_events + 2)
+    x = rng.standard_normal((args.n + pool_rows, args.d)).astype(np.float32)
+    q = rng.standard_normal((max(args.requests, tile_lanes),
+                             args.d)).astype(np.float32)
+    corpus, pool = x[:args.n], x[args.n:]
+    cfg = StreamingConfig(
+        build=rd.RNNDescentConfig(s=8, r=24, t1=3, t2=2, capacity=32,
+                                  chunk=128),
+        seed_l=32, seed_k=16, seed_iters=48, batch_k=4, sweeps=2,
+        splice_k=6)
+    scfg = S.SearchConfig(l=32, k=24, max_iters=96, topk=10)
+    key = jax.random.PRNGKey(0)
+
+    def build_and_probe():
+        ann = StreamingANN.from_corpus(corpus, cfg, key=key)
+        _, st = ann.snapshot()
+        eps = S.default_entry_point(st.x, scfg.metric,
+                                    valid=ST.active_mask(st))
+        ids, dists = ann.search(q[:tile_lanes], scfg, entry_points=eps,
+                                tile_b=tile_lanes, store=st)
+        jax.block_until_ready((ids, dists))
+        return ann, eps, np.asarray(ids), np.asarray(dists)
+
+    # ---------------------------------------------------- untraced reference
+    print("== reference run (tracing off) ==")
+    ann_ref, _, ids_ref, dists_ref = build_and_probe()
+    g_ref = jax.block_until_ready(ann_ref.store.graph)
+    ref_bytes = (np.asarray(g_ref.neighbors).tobytes(),
+                 np.asarray(g_ref.dists).tobytes(),
+                 ids_ref.tobytes(), dists_ref.tobytes())
+    del ann_ref, g_ref
+
+    # ------------------------------------------------------------ traced run
+    print("== traced run (obs enabled) ==")
+    obs.enable()
+    obs.reset()
+
+    with trace.span("obs/build") as bsp:
+        ann, eps, ids_t, dists_t = build_and_probe()
+        if bsp:
+            bsp.set(n=args.n, d=args.d, **jaxhooks.traced_hlo_costs(
+                lambda qq: ann.search(qq, scfg, entry_points=eps,
+                                      tile_b=tile_lanes),
+                q[:tile_lanes]))
+    jaxhooks.record_memory(phase="build")
+
+    g_t = jax.block_until_ready(ann.store.graph)
+    got_bytes = (np.asarray(g_t.neighbors).tobytes(),
+                 np.asarray(g_t.dists).tobytes(),
+                 ids_t.tobytes(), dists_t.tobytes())
+    _check(failures, got_bytes[:2] == ref_bytes[:2],
+           "traced build graph bitwise-equal to untraced")
+    _check(failures, got_bytes[2:] == ref_bytes[2:],
+           "traced search results bitwise-equal to untraced")
+
+    # --------------------------------------------------------------- serving
+    # pre-grow so no growth recompile can land mid-session, then warm every
+    # steady-state shape (bench_serving's protocol): full tile, both write
+    # batch shapes, entry refresh at the post-update epoch.
+    ann = StreamingANN(store=ST.grow(ann.store, args.n + pool_rows + 1),
+                       cfg=cfg)
+    with trace.span("obs/warmup"):
+        ann.insert(pool[:wb])
+        ann.delete(np.arange(args.n - wb, args.n))
+        _, st = ann.snapshot()
+        eps = S.default_entry_point(st.x, scfg.metric,
+                                    valid=ST.active_mask(st))
+        out = ann.search(q[:tile_lanes], scfg, entry_points=eps,
+                         tile_b=tile_lanes,
+                         lane_valid=jax.numpy.ones((tile_lanes,), bool),
+                         store=st)
+        jax.block_until_ready(out)
+
+    srv = ServingConfig(
+        admission=AdmissionConfig(tile_lanes=tile_lanes),
+        writer=WriterConfig(insert_batch=wb, delete_batch=wb),
+        search=scfg)
+    fe = ServingFrontend(ann, srv)
+    writes = []
+    for e in range(n_events):
+        after = (e + 1) * args.requests // (n_events + 1)
+        ins = pool[wb * (e + 1):wb * (e + 2)]
+        dl = np.arange(args.n - wb * (e + 2), args.n - wb * (e + 1))
+        writes += [(after, "insert", ins), (after, "delete", dl)]
+    spec = LoadSpec(n_requests=args.requests, qps=args.qps, deadline_s=0.5,
+                    arrival="poisson", seed=0)
+
+    compiles0 = jaxhooks.backend_compiles()
+    with trace.span("obs/serve_session"):
+        summ = run_session(fe, np.asarray(q, np.float32), spec,
+                           writes=writes)
+    steady = jaxhooks.backend_compiles() - compiles0
+    jaxhooks.record_memory(phase="serve")
+
+    _check(failures, summ["completed"] == args.requests,
+           f"serving session completed {summ['completed']}/{args.requests}")
+    _check(failures, steady == 0,
+           f"zero steady-state backend compiles (saw {steady:g})")
+
+    # -------------------------------------------------------------- artifacts
+    trace_path = os.path.join(args.out, "trace.json")
+    trace.write_chrome_trace(trace_path, process_name="repro.obs session")
+    metrics.write_exposition(os.path.join(args.out, "metrics.prom"))
+    with open(os.path.join(args.out, "metrics.json"), "w") as f:
+        json.dump(metrics.REGISTRY.snapshot(), f, indent=1)
+    _validate_trace(trace_path, failures)
+    obs.disable()
+
+    print(f"\nartifacts: {trace_path} (open in https://ui.perfetto.dev), "
+          f"metrics.prom, metrics.json")
+    lat = summ["latency_ms"]
+    print(f"serving: p50={lat['p50']:.2f}ms p95={lat['p95']:.2f}ms "
+          f"qps={summ['achieved_qps']:.0f} "
+          f"staleness_mean={summ['staleness_mean']}")
+    print("\nspan summary:")
+    print(trace.summary_table())
+
+    if failures:
+        print(f"\n{len(failures)} contract check(s) FAILED", file=sys.stderr)
+        return 1
+    print("\nall observability contracts hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

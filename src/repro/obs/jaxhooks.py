@@ -1,0 +1,157 @@
+"""Adapters from the JAX runtime into the obs registry and trace.
+
+Three capture surfaces:
+
+* **Compile events** — :func:`install` registers one process-lifetime
+  ``jax.monitoring`` duration listener (jax offers registration but no
+  per-listener removal, the same constraint
+  ``analysis/recompile_guard.py`` works under, so the listener itself is
+  permanent and gates on ``trace.enabled()``). Every ``*compile*`` event
+  lands as a ``jax_compile_events_total{event=...}`` counter plus a
+  ``jax_compile_seconds`` histogram, and backend compiles additionally
+  bump ``jax_backend_compiles_total`` — the counter the serving CLI reads
+  before/after its measured session to enforce the zero-steady-state-
+  compile contract. Each event is also injected as a retroactive span on a
+  dedicated ``jax.compile`` track (the event arrives as a duration after
+  the fact, so the span is back-dated by its wall time).
+
+* **Device-memory watermarks** — :func:`record_memory` snapshots
+  ``device.memory_stats()`` per device into
+  ``obs_device_bytes{device=,kind=}`` gauges. On backends that expose no
+  allocator stats (CPU returns ``None``) it falls back to summing
+  ``jax.live_arrays()`` nbytes — a host-visible liveness watermark rather
+  than an allocator high-water mark, labeled ``kind="live_arrays"`` so the
+  two are never conflated.
+
+* **HLO costs** — :func:`traced_hlo_costs` lowers + compiles a callable
+  and reuses ``launch/hlo_analysis.py`` to return flat span attributes
+  (dot FLOPs, traffic bytes, collective bytes per device) that build
+  drivers attach to their top-level build span.
+
+Everything here runs on the host — no callbacks inside jitted programs
+(the jaxpr auditor's host-callback rule is the enforcement guard), so
+installing the hooks can never perturb a traced computation.
+"""
+from __future__ import annotations
+
+import threading
+
+from repro.obs import metrics as M
+from repro.obs import trace as T
+
+COMPILE_SECONDS_BUCKETS = (0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0,
+                           10.0, 30.0, 60.0)
+
+_JAX_TRACK_TID = 2            # virtual Perfetto track for compile events
+_install_lock = threading.Lock()
+_installed = False
+
+
+def _short(event: str) -> str:
+    return event.strip("/").rsplit("/", 1)[-1]
+
+
+def _on_duration(event: str, duration: float, **kw) -> None:
+    if not T.enabled() or "compile" not in event:
+        return
+    reg = M.REGISTRY
+    reg.counter("jax_compile_events_total",
+                help="jax.monitoring compile-phase duration events",
+                event=_short(event)).inc()
+    reg.histogram("jax_compile_seconds", buckets=COMPILE_SECONDS_BUCKETS,
+                  help="wall seconds per compile-phase event").observe(
+                      duration)
+    if "backend_compile" in event:
+        reg.counter("jax_backend_compiles_total",
+                    help="XLA backend compilations (the zero-steady-state "
+                         "serving contract counts these)").inc()
+    attrs = {k: v for k, v in kw.items()
+             if isinstance(v, (str, int, float, bool))}
+    attrs["event"] = event
+    T.add_complete("jax/" + _short(event), T.clock() - duration, duration,
+                   tid=_JAX_TRACK_TID, **attrs)
+
+
+def _on_event(event: str, **kw) -> None:
+    if not T.enabled():
+        return
+    M.REGISTRY.counter("jax_events_total",
+                       help="jax.monitoring point events",
+                       event=_short(event)).inc()
+
+
+def install() -> None:
+    """Register the jax.monitoring listeners (idempotent; the listeners
+    are process-lifetime and self-gate on ``trace.enabled()``)."""
+    global _installed
+    with _install_lock:
+        if _installed:
+            return
+        import jax
+        jax.monitoring.register_event_duration_secs_listener(_on_duration)
+        jax.monitoring.register_event_listener(_on_event)
+        _installed = True
+
+
+def backend_compiles() -> float:
+    """Current value of the backend-compile counter (0 if never bumped)."""
+    return M.REGISTRY.counter(
+        "jax_backend_compiles_total",
+        help="XLA backend compilations (the zero-steady-state serving "
+             "contract counts these)").value
+
+
+def record_memory(phase: str = "") -> dict:
+    """Snapshot per-device memory into ``obs_device_bytes`` gauges and
+    return {device: {kind: bytes}}. Allocator stats where the backend
+    exposes them; host-side live-array watermark otherwise (CPU)."""
+    import jax
+
+    out: dict[str, dict[str, int]] = {}
+    reg = M.REGISTRY
+    fallback_needed = False
+    for d in jax.devices():
+        stats = d.memory_stats()
+        name = f"{d.platform}:{d.id}"
+        if stats:
+            picked = {k: int(stats[k]) for k in
+                      ("bytes_in_use", "peak_bytes_in_use", "bytes_limit")
+                      if k in stats}
+            out[name] = picked
+            for kind, v in picked.items():
+                reg.gauge("obs_device_bytes",
+                          help="per-device allocator stats at the last "
+                               "record_memory() call",
+                          device=name, kind=kind, phase=phase).set(v)
+        else:
+            fallback_needed = True
+    if fallback_needed:
+        live = sum(int(a.nbytes) for a in jax.live_arrays())
+        out["host"] = {"live_arrays": live}
+        reg.gauge("obs_device_bytes",
+                  help="per-device allocator stats at the last "
+                       "record_memory() call",
+                  device="host", kind="live_arrays", phase=phase).set(live)
+    return out
+
+
+def traced_hlo_costs(fn, *args, n_devices: int | None = None,
+                     static_argnames=()) -> dict:
+    """Lower + compile ``fn(*args)`` and return the HLO-derived cost
+    attributes (flat str->number dict) a build span can carry: dot FLOPs,
+    memory-traffic estimates and collective wire bytes per device, via
+    ``launch/hlo_analysis.py``. Args may be concrete arrays or
+    ``jax.ShapeDtypeStruct``s — nothing is executed."""
+    import jax
+
+    from repro.launch import hlo_analysis as H
+
+    hlo = jax.jit(fn, static_argnames=static_argnames).lower(
+        *args).compile().as_text()
+    nd = int(n_devices if n_devices is not None else jax.device_count())
+    costs = H.module_costs(hlo, nd)
+    coll = H.collective_summary(hlo, nd)
+    out = {f"hlo_{k}": int(v) for k, v in costs.items()}
+    out["hlo_collective_bytes_per_device"] = coll["total_bytes_per_device"]
+    out["hlo_collective_instructions"] = coll["n_instructions"]
+    return out

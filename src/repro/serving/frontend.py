@@ -166,39 +166,59 @@ class ServingFrontend:
         return self._ep_cache[1]
 
     def _dispatch(self, now: float) -> None:
+        from repro.obs import trace as _tr
         depth_before = self.queue.depth()
         reqs = self.queue.take()
         if not reqs:
             return
-        epoch, st = self.ann.snapshot()
-        eps = self._entry(st, epoch)
-        q_dev = self.staging.stage([r.query for r in reqs])
-        lv = self.staging.lane_mask(len(reqs))
-        out = self.ann.search(
-            q_dev, self.cfg.search, entry_points=eps,
-            tile_b=self.cfg.admission.tile_lanes, shard=self.cfg.shard,
-            with_stats=self.cfg.record_work, lane_valid=jnp.asarray(lv),
-            store=st)
-        if self.cfg.record_work:
-            ids, dists, stats = out
-            work = stats["work"]
-        else:
-            ids, dists = out
-            work = None
-        tile_index = self.telemetry.tiles_dispatched
-        self.telemetry.record_dispatch(
-            [r.rid for r in reqs], now, occupancy=len(reqs),
-            tile_lanes=self.cfg.admission.tile_lanes,
-            queue_depth=depth_before - len(reqs), epoch=epoch)
-        self._inflight.append(_Inflight(
-            reqs=reqs, ids=ids, dists=dists, work=work, dispatch_t=now,
-            epoch=epoch, tile_index=tile_index))
+        with _tr.span("serving/dispatch") as dsp:
+            epoch, st = self.ann.snapshot()
+            eps = self._entry(st, epoch)
+            with _tr.span("serving/stage"):
+                q_dev = self.staging.stage([r.query for r in reqs])
+                lv = self.staging.lane_mask(len(reqs))
+            with _tr.span("serving/search_dispatch"):
+                # span covers program dispatch; device execution is timed
+                # by the search/tiled span inside ann.search and its end
+                # observed at serving/readout — the pipeline overlap is
+                # the point, so dispatch never blocks here
+                out = self.ann.search(
+                    q_dev, self.cfg.search, entry_points=eps,
+                    tile_b=self.cfg.admission.tile_lanes,
+                    shard=self.cfg.shard,
+                    with_stats=self.cfg.record_work,
+                    lane_valid=jnp.asarray(lv), store=st)
+            if self.cfg.record_work:
+                ids, dists, stats = out
+                work = stats["work"]
+            else:
+                ids, dists = out
+                work = None
+            tile_index = self.telemetry.tiles_dispatched
+            if dsp:
+                dsp.set(occupancy=len(reqs),
+                        tile_lanes=self.cfg.admission.tile_lanes,
+                        queue_depth=depth_before - len(reqs), epoch=epoch,
+                        tile_index=tile_index,
+                        oldest_wait_s=now - min(r.enqueue_t for r in reqs))
+            self.telemetry.record_dispatch(
+                [r.rid for r in reqs], now, occupancy=len(reqs),
+                tile_lanes=self.cfg.admission.tile_lanes,
+                queue_depth=depth_before - len(reqs), epoch=epoch)
+            self._inflight.append(_Inflight(
+                reqs=reqs, ids=ids, dists=dists, work=work, dispatch_t=now,
+                epoch=epoch, tile_index=tile_index))
 
     def _harvest(self) -> None:
+        from repro.obs import trace as _tr
         t = self._inflight.popleft()
-        ids = np.asarray(t.ids)          # blocks until the tile finishes
-        dists = np.asarray(t.dists)
-        work = int(t.work) if t.work is not None else None
+        with _tr.span("serving/readout") as sp:
+            ids = np.asarray(t.ids)      # blocks until the tile finishes
+            dists = np.asarray(t.dists)
+            work = int(t.work) if t.work is not None else None
+            if sp:
+                sp.set(occupancy=len(t.reqs), tile_index=t.tile_index,
+                       epoch_dispatch=t.epoch)
         done_t = self.clock()
         self.telemetry.record_complete(
             [r.rid for r in t.reqs], done_t, tile_index=t.tile_index,

@@ -137,14 +137,20 @@ class BatchedWriter:
         index. Returns the number of epoch swaps performed. Call from the
         single pump loop: commits happen on the caller's thread, serialized
         by construction."""
+        from repro.obs import trace as _tr
         swaps = 0
         while True:
             batch = self._cut(self._del, self.cfg.delete_batch, force)
             if not batch:
                 break
-            ids = np.array([rid for _, _, rid in batch], np.int64)
-            newly = self.ann.delete(ids)
-            ep = self.ann.epoch
+            with _tr.span("serving/commit") as sp:
+                ids = np.array([rid for _, _, rid in batch], np.int64)
+                newly = self.ann.delete(ids)
+                ep = self.ann.epoch
+                if sp:
+                    sp.set(kind="delete", n=len(batch), epoch=ep,
+                           forced=force and len(batch) <
+                           self.cfg.delete_batch)
             for (t, pos, _), live in zip(batch, newly):
                 t._land(pos, int(live), ep)
             if self._on_commit is not None:
@@ -154,9 +160,14 @@ class BatchedWriter:
             batch = self._cut(self._ins, self.cfg.insert_batch, force)
             if not batch:
                 break
-            rows = np.stack([r for _, _, r in batch])
-            slots = self.ann.insert(rows)
-            ep = self.ann.epoch
+            with _tr.span("serving/commit") as sp:
+                rows = np.stack([r for _, _, r in batch])
+                slots = self.ann.insert(rows)
+                ep = self.ann.epoch
+                if sp:
+                    sp.set(kind="insert", n=len(batch), epoch=ep,
+                           forced=force and len(batch) <
+                           self.cfg.insert_batch)
             for (t, pos, _), slot in zip(batch, slots):
                 t._land(pos, int(slot), ep)
             if self._on_commit is not None:
